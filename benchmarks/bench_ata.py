@@ -1,0 +1,46 @@
+"""Paper Figure 3: sequential ATA vs the classical syrk (`dsyrk` analogue).
+
+Compares ``repro.core.ata`` (Strassen-based, 2/3·T_S flops) against the
+XLA-native classical ``AᵀA`` on square and tall matrices of growing size.
+Derived column: effective GFLOPs (Eq. 9, r=1) for both, the measured
+speedup, and the analytic flop ratio at that size/cutoff.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import effective_gflops, emit, time_fn
+from repro.core import ata
+from repro.core.reference import ata_flops, classical_syrk_flops
+
+N_BASE = 256
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for m, n in [(512, 512), (1024, 1024), (2048, 2048), (4096, 1024), (2048, 512)]:
+        a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+
+        f_ata = jax.jit(lambda a: ata(a, n_base=N_BASE))
+        f_ref = jax.jit(
+            lambda a: jax.lax.dot_general(
+                a, a, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+        )
+        t_ata = time_fn(f_ata, a)
+        t_ref = time_fn(f_ref, a)
+        flop_ratio = ata_flops(m, n, N_BASE) / classical_syrk_flops(m, n)
+        emit(
+            f"fig3_ata_{m}x{n}",
+            t_ata,
+            f"eff_gflops={effective_gflops(n, t_ata):.2f} "
+            f"ref_gflops={effective_gflops(n, t_ref):.2f} "
+            f"speedup={t_ref / t_ata:.3f} flop_ratio={flop_ratio:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,99 @@
+"""Paper Figure 6 + Table 1: distributed ATA-D vs baselines.
+
+Distributed analogue on host-platform devices: the two-level schedule
+(rows over 'data' × tiles over 'model' — ATA-D's layout) vs the plain
+single-device classical gram ("1-rank baseline"), including the
+distribute/retrieve cost (device_put of A + full gather of C), which is
+what the paper's shaded areas measure. Also reports the analytic
+latency/bandwidth model of Prop. 4.2 for the same (n, P).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+from benchmarks.common import emit
+from repro.core.task_tree import ell_distributed
+
+_CHILD = r"""
+import jax, jax.numpy as jnp, numpy as np, time
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.distributed import ata_tile_parallel
+devs = len(jax.devices())
+d = {d}; m = devs // d
+mesh = jax.make_mesh((d, m), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+r = np.random.default_rng(0)
+a_host = r.standard_normal(({m_}, {n})).astype(np.float32)
+f = jax.jit(lambda a: ata_tile_parallel(a, mesh, task_axis="model",
+                                        row_axis="data", n_base=256))
+sh = NamedSharding(mesh, P("data", None))
+# warm
+a = jax.device_put(jnp.asarray(a_host), sh); jax.block_until_ready(f(a))
+tc, tt = [], []
+for _ in range(5):
+    t0 = time.perf_counter()
+    a = jax.device_put(jnp.asarray(a_host), sh)      # distribute
+    c = f(a)                                          # compute
+    jax.block_until_ready(c)
+    t1 = time.perf_counter()
+    _ = np.asarray(c)                                 # retrieve to host
+    t2 = time.perf_counter()
+    tc.append(t1 - t0); tt.append(t2 - t0)
+print("TIME", float(np.median(tc)), float(np.median(tt)))
+"""
+
+
+def _run_child(p: int, d: int, m: int, n: int):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+    env["PYTHONPATH"] = os.path.abspath("src")
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD.format(d=d, m_=m, n=n)],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    mt = re.search(r"TIME ([0-9.e-]+) ([0-9.e-]+)", out.stdout)
+    if not mt:
+        raise RuntimeError(f"child failed (P={p}): {out.stderr[-500:]}")
+    return float(mt.group(1)), float(mt.group(2))
+
+
+def _prop42(n: int, p: int):
+    """Prop. 4.2 analytic latency (messages) and bandwidth (words)."""
+    ell = ell_distributed(p)
+    lat = 2 * (7 * max(ell - 1, 0) + 5)
+    bw = 6 * (n / 2) ** 2 + n * (n + 2) / 2
+    if ell >= 2:
+        bw += 7 / 6 * n**2 * (1 - 1 / 4 ** (ell - 2))
+    return lat, bw
+
+
+def run():
+    m, n = 4096, 2048
+    base_c, base_t = _run_child(1, 1, m, n)
+    emit(f"fig6_atad_P1_{m}x{n}", base_t, f"compute_us={base_c*1e6:.0f} speedup=1.00")
+    for p, d in [(2, 2), (4, 2), (8, 2)]:
+        tc, tt = _run_child(p, d, m, n)
+        lat, bw = _prop42(n, p)
+        emit(
+            f"fig6_atad_P{p}_{m}x{n}",
+            tt,
+            f"compute_us={tc*1e6:.0f} speedup={base_t/tt:.2f} "
+            f"ell={ell_distributed(p)} prop42_msgs={lat} prop42_words={bw:.2e}",
+        )
+    # Table 1 analogue: SM (all devices one task axis) vs DM (2-level) at
+    # growing n — speedup of the 2-level layout including retrieval.
+    for nn in [1024, 2048]:
+        sm_c, sm_t = _run_child(8, 1, 2 * nn, nn)
+        dm_c, dm_t = _run_child(8, 2, 2 * nn, nn)
+        emit(
+            f"table1_sm_vs_dm_n{nn}", dm_t,
+            f"sm_us={sm_t*1e6:.0f} dm_us={dm_t*1e6:.0f} speedup={sm_t/dm_t:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

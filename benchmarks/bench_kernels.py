@@ -1,0 +1,43 @@
+"""Kernel-level microbench: Pallas syrk / gemm_tn (interpret mode on CPU)
+vs their pure-jnp oracles, plus the analytic MXU-work saving of the
+triangular grid (lower blocks only — the paper's low(C) saving at tile
+level). Interpret-mode timings are NOT hardware numbers (the kernel body
+runs in Python); the derived column therefore reports the *structural*
+quantities the TPU run would inherit: grid sizes and flop fractions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import gemm_tn, syrk
+from repro.kernels.ref import gemm_tn_ref, syrk_ref
+
+
+def run():
+    rng = np.random.default_rng(2)
+    m, n = 512, 512
+    a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    bm, bn = 256, 128
+    nb = -(-n // bn)
+    tri = nb * (nb + 1) // 2
+    t = time_fn(lambda a: syrk(a, blocks=(bm, bn), interpret=True), a, iters=2, warmup=1)
+    emit(
+        f"kernel_syrk_{m}x{n}",
+        t,
+        f"grid_tiles={tri} full_tiles={nb*nb} "
+        f"mxu_work_fraction={tri/(nb*nb):.3f} interpret=True",
+    )
+    b = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    t = time_fn(lambda a, b: gemm_tn(a, b, blocks=(bm, bn, bn), interpret=True),
+                a, b, iters=2, warmup=1)
+    emit(f"kernel_gemm_tn_{m}x{n}", t, f"grid_tiles={nb*nb} interpret=True")
+    # correctness cross-check in the bench harness itself
+    err = float(jnp.abs(syrk(a, blocks=(bm, bn), interpret=True) - syrk_ref(a)).max())
+    emit("kernel_syrk_maxerr", 0.0, f"max_abs_err={err:.2e}")
+
+
+if __name__ == "__main__":
+    run()

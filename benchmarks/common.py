@@ -1,0 +1,35 @@
+"""Shared benchmark helpers: timing, CSV output, effective-GFLOPs metric."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["time_fn", "effective_gflops", "emit"]
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
+    """Median wall time (s) of fn(*args) with device sync."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def effective_gflops(n: int, seconds: float, r: int = 1) -> float:
+    """Paper Eq. (9): r·n³ / (time·1e9); r=1 for AᵀA-specialized algorithms,
+    r=2 for general matmul — comparable across classical & fast algorithms."""
+    return r * n**3 / (seconds * 1e9)
+
+
+def emit(name: str, seconds: float, derived: str):
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)

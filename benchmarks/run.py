@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # all benches
+    PYTHONPATH=src python -m benchmarks.run fig3 fig5  # filter by prefix
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+BENCHES = [
+    ("fig3_ata_vs_syrk", "benchmarks.bench_ata"),
+    ("fig4_faststrassen_vs_gemm", "benchmarks.bench_strassen"),
+    ("fig5_shared_memory_scaling", "benchmarks.bench_shared"),
+    ("fig6_distributed_scaling", "benchmarks.bench_distributed"),
+    ("kernels_pallas", "benchmarks.bench_kernels"),
+    ("shampoo_integration", "benchmarks.bench_shampoo"),
+]
+
+
+def main() -> None:
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, module in BENCHES:
+        if filters and not any(f in name for f in filters):
+            continue
+        print(f"# --- {name} ({module}) ---", flush=True)
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+        except Exception as e:
+            failed.append(name)
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Serving example: batched prefill + decode with slot-based batching.
+
+Runs the serving driver on a reduced config (CPU-sized); on TPU the same
+code paths serve the full configs with the production mesh.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch qwen1.5-0.5b]
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+    serve_driver.main([
+        "--arch", args.arch, "--smoke",
+        "--requests", str(args.requests),
+        "--batch", "4", "--prompt-len", "32", "--gen-len", "16",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end training example: a ~100M-param LM for a few hundred steps.
+
+Uses the full production stack (sharded train step, checkpointing,
+preemption guard, deterministic pipeline) via the ``repro.launch.train``
+driver. The model is a scaled qwen-family config (~100M params); loss on
+the synthetic Zipf-Markov stream drops well below log(V) within a few
+hundred steps, demonstrating real learning end to end.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import registry
+from repro.configs.base import ModelConfig
+from repro.launch import train as train_driver
+
+# ~100M params: 12L d=512 8H ffn=2048 vocab=32k
+LM_100M = ModelConfig(
+    name="lm-100m", family="dense", num_layers=12, d_model=512,
+    num_heads=8, num_kv_heads=8, head_dim=64, d_ff=2048, vocab_size=32_000,
+    qkv_bias=False,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "shampoo"])
+    ap.add_argument("--out", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # register the example config so the driver can resolve it
+    registry.ARCHS["lm-100m"] = LM_100M
+    registry.SMOKES["lm-100m"] = LM_100M
+    print(f"lm-100m parameters: {LM_100M.num_params()/1e6:.1f}M")
+
+    final_loss = train_driver.main([
+        "--arch", "lm-100m",
+        "--steps", str(args.steps),
+        "--batch", str(args.batch),
+        "--seq", str(args.seq),
+        "--optimizer", args.optimizer,
+        "--out", args.out,
+        "--log-every", "20",
+        "--save-every", "100",
+    ])
+    import math
+    print(f"final loss {final_loss:.3f} vs uniform log(V) = "
+          f"{math.log(LM_100M.vocab_size):.3f}")
+
+
+if __name__ == "__main__":
+    main()

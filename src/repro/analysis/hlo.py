@@ -1,0 +1,84 @@
+"""HLO-text analysis: collective-byte accounting for the roofline model.
+
+``collective_bytes(hlo)`` parses compiled (post-SPMD) HLO and sums the
+result-buffer bytes of every collective op, keyed by op kind. Bytes are
+**per device** (the compiled module is the per-device SPMD program), which
+matches the per-device flop/byte numbers from ``compiled.cost_analysis()``.
+
+Handles plain and async (``-start``/``-done``) forms — only starts are
+counted — and tuple-shaped results (variadic collectives).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+__all__ = ["collective_bytes", "collective_seconds", "DTYPE_BYTES", "COLLECTIVE_KINDS"]
+
+COLLECTIVE_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# a shape like  bf16[128,1024]{1,0}  or  f32[] ; layout braces optional
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# an HLO instruction: `%name = <result-type> <opcode>(...)`
+_INSTR_RE = re.compile(
+    r"=\s+(?P<result>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<suffix>-start|-done)?\b"
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue  # e.g. token[] / opaque
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device result bytes of every collective, keyed by kind."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    for m in _INSTR_RE.finditer(hlo_text):
+        if m.group("suffix") == "-done":
+            continue  # counted at -start
+        out[m.group("op")] += _shape_bytes(m.group("result"))
+    return out
+
+
+def collective_seconds(
+    bytes_by_kind: Dict[str, int],
+    link_bw: float = 50e9,
+    scale: float = 1.0,
+) -> float:
+    """Time model: all-reduce moves ≈2× its buffer over the bottleneck link
+    (ring reduce-scatter + all-gather); the others ≈1×. ``scale`` multiplies
+    byte counts (used by the layer-differencing composition)."""
+    factors = {
+        "all-reduce": 2.0,
+        "all-gather": 1.0,
+        "reduce-scatter": 1.0,
+        "all-to-all": 1.0,
+        "collective-permute": 1.0,
+    }
+    t = 0.0
+    for kind, b in bytes_by_kind.items():
+        t += factors.get(kind, 1.0) * b * scale / link_bw
+    return t

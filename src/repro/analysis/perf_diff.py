@@ -1,0 +1,60 @@
+"""Diff two dry-run artifacts and emit a §Perf log entry.
+
+    PYTHONPATH=src python -m repro.analysis.perf_diff \
+        results/dryrun/cmd__decode_32k__single.json \
+        results/dryrun/cmd__decode_32k__single__bf16.json \
+        --hypothesis "serving params in bf16 halves the memory term"
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.analysis.roofline import compose_cell
+
+
+def summarize(rec):
+    row = compose_cell(rec)
+    mem = rec["artifacts"]["main"]["memory"]
+    return {
+        "compute_s": row["compute_s"],
+        "memory_s": row["memory_s"],
+        "collective_s": row["collective_s"],
+        "dominant": row["dominant"],
+        "roofline_fraction": row["roofline_fraction"],
+        "useful_flop_ratio": row["useful_flop_ratio"],
+        "peak_gib": mem.get("peak_bytes_est", 0) / 2**30,
+        "coll_bytes": row["collective_bytes_per_dev"],
+    }
+
+
+def fmt_delta(a, b):
+    if a == 0:
+        return "n/a"
+    return f"{(b - a) / a * 100:+.1f}%"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("before")
+    ap.add_argument("after")
+    ap.add_argument("--hypothesis", default="")
+    args = ap.parse_args()
+    b = summarize(json.load(open(args.before)))
+    a = summarize(json.load(open(args.after)))
+    print(f"**Hypothesis**: {args.hypothesis}")
+    print(f"| term | before | after | Δ |")
+    print(f"|---|---|---|---|")
+    for k in ("compute_s", "memory_s", "collective_s"):
+        print(f"| {k} | {b[k]:.4f} | {a[k]:.4f} | {fmt_delta(b[k], a[k])} |")
+    print(f"| peak GiB/dev | {b['peak_gib']:.2f} | {a['peak_gib']:.2f} | "
+          f"{fmt_delta(b['peak_gib'], a['peak_gib'])} |")
+    print(f"| roofline frac | {b['roofline_fraction']:.4f} | "
+          f"{a['roofline_fraction']:.4f} | "
+          f"{fmt_delta(b['roofline_fraction'], a['roofline_fraction'])} |")
+    print(f"| dominant | {b['dominant']} | {a['dominant']} | |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+Public API:
+  * :func:`repro.core.ata` — Strassen-based ``alpha·AᵀA`` (paper Algorithm 1).
+  * :func:`repro.core.strassen_tn` — rectangular TN Strassen (FastStrassen).
+  * :mod:`repro.core.reference` — naive oracles + exact flop counters.
+  * :mod:`repro.core.task_tree` — ATA-S/ATA-D task scheduler (paper §4.1).
+  * :mod:`repro.core.distributed` — shard_map gram schedules (paper §4.2/4.3).
+"""
+
+from repro.core.ata import ata
+from repro.core.strassen import DEFAULT_N_BASE, strassen_tn
+from repro.core import reference
+
+__all__ = ["ata", "strassen_tn", "reference", "DEFAULT_N_BASE"]

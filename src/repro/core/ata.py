@@ -1,0 +1,144 @@
+"""ATA — cache-oblivious Strassen-based ``C = alpha·AᵀA`` (paper Algorithm 1).
+
+The recursion (Eq. 1-2 of the paper), for ``A ∈ R^{m×n}`` split into 2×2
+quadrants with floor/ceil halving:
+
+    C11 = A11ᵀA11 + A21ᵀA21      (two recursive ATA calls)
+    C22 = A12ᵀA12 + A22ᵀA22      (two recursive ATA calls)
+    C21 = A12ᵀA11 + A22ᵀA21      (two rectangular Strassen TN calls)
+    C12 = C21ᵀ                   (never computed — symmetry)
+
+Cost: ``T(n) = 4T(n/2) + 2T_S(n/2) + 3(n/2)² ≈ (2/3)·T_S(n)`` — two thirds of
+Strassen applied naively, i.e. (14/3)·n^{log₂7} (paper Section 3.2).
+
+TPU adaptation notes (see DESIGN.md §2):
+
+* the recursion unrolls at trace time (static shapes) — cache-obliviousness
+  survives as nested recursive blocking that XLA/Mosaic tiles onto
+  HBM→VMEM→VREG;
+* the symmetric saving at the *base-case* level lives in the Pallas ``syrk``
+  kernel, which computes only lower-triangular output blocks and mirrors;
+* ``C12 = C21ᵀ`` is materialized once per level by ``jnp.block`` — the flop
+  saving is kept, and the transpose is a copy XLA folds into the layout of the
+  consuming op (the paper likewise materializes the full square C at the
+  root).
+
+``ata`` is a pure JAX function: it composes with ``jit``, ``vmap`` (used by
+the blocked-Shampoo optimizer over parameter blocks), ``grad``, and
+``shard_map`` (used by ``repro.core.distributed``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strassen import DEFAULT_N_BASE, _dot_tn, _rec_strassen, _rec_winograd
+
+__all__ = ["ata", "DEFAULT_N_BASE"]
+
+
+def _syrk_base(a, acc_dtype):
+    """Default base case: ``AᵀA`` via one TN dot, lower triangle mirrored.
+
+    The Pallas kernel (``repro.kernels.ops.syrk``) replaces this on TPU and
+    computes only the lower-triangular blocks; at the pure-jnp level the MXU
+    executes the full tile matmul, and we mirror ``low(C)`` so the public
+    invariant *C is exactly symmetric* holds bitwise (XLA's accumulation
+    order can differ per output position, so the raw matmul is only
+    approximately symmetric).
+    """
+    c = _dot_tn(a, a, acc_dtype)
+    low = jnp.tril(c)
+    return low + jnp.tril(c, -1).T
+
+
+def _rec_ata(a, n_base, base_syrk, strassen_rec, base_dot, acc_dtype):
+    m, n = a.shape
+    if min(m, n) <= n_base:
+        return base_syrk(a)
+
+    # floor/ceil split, paper Eq. (1): m1 = ⌊m/2⌋, n1 = ⌊n/2⌋.
+    m1, n1 = m // 2, n // 2
+    a11 = a[:m1, :n1]
+    a12 = a[:m1, n1:]
+    a21 = a[m1:, :n1]
+    a22 = a[m1:, n1:]
+
+    rec = functools.partial(
+        _rec_ata,
+        n_base=n_base,
+        base_syrk=base_syrk,
+        strassen_rec=strassen_rec,
+        base_dot=base_dot,
+        acc_dtype=acc_dtype,
+    )
+    st = functools.partial(
+        strassen_rec, n_base=n_base, base_dot=base_dot, acc_dtype=acc_dtype
+    )
+
+    c11 = rec(a11) + rec(a21)          # (n1, n1)
+    c22 = rec(a12) + rec(a22)          # (n2, n2)
+    c21 = st(a12, a11) + st(a22, a21)  # (n2, n1)
+
+    return jnp.block([[c11, c21.T], [c21, c22]])
+
+
+def ata(
+    a: jax.Array,
+    *,
+    alpha: float = 1.0,
+    c: Optional[jax.Array] = None,
+    beta: float = 1.0,
+    n_base: int = DEFAULT_N_BASE,
+    variant: str = "strassen",
+    base_syrk: Optional[Callable] = None,
+    base_dot: Optional[Callable] = None,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """``C = alpha·AᵀA (+ beta·C)`` via the paper's ATA algorithm.
+
+    Args:
+      a: ``(m, n)`` input, any rectangular shape (odd sizes handled by the
+        floor/ceil split here and virtual padding inside Strassen).
+      alpha, c, beta: BLAS-style scaling/accumulation.
+      n_base: recursion cutoff; tiles with any dim ≤ n_base go to the base
+        syrk/gemm. The TPU analogue of the paper's "fits in cache".
+      variant: Strassen variant for the C21 off-diagonal products —
+        ``'strassen'`` (paper-faithful) or ``'winograd'`` (beyond-paper,
+        15 adds).
+      base_syrk: base-case ``f(a) -> aᵀa`` (full symmetric tile). Defaults to
+        a TN dot_general; pass ``repro.kernels.ops.syrk`` for the Pallas
+        kernel.
+      base_dot: base-case ``f(a, b) -> aᵀb`` for the Strassen leaves.
+      acc_dtype: accumulation dtype.
+
+    Returns:
+      ``(n, n)`` full symmetric product.
+    """
+    if a.ndim != 2:
+        raise ValueError(f"ata expects a 2-D operand, got shape {a.shape}")
+    if variant not in ("strassen", "winograd"):
+        raise ValueError(f"unknown variant {variant!r}")
+    if base_syrk is None:
+        base_syrk = functools.partial(_syrk_base, acc_dtype=acc_dtype)
+    if base_dot is None:
+        base_dot = functools.partial(_dot_tn, acc_dtype=acc_dtype)
+
+    strassen_rec = _rec_strassen if variant == "strassen" else _rec_winograd
+    out = _rec_ata(
+        a,
+        n_base=n_base,
+        base_syrk=base_syrk,
+        strassen_rec=strassen_rec,
+        base_dot=base_dot,
+        acc_dtype=acc_dtype,
+    )
+    if alpha != 1.0:
+        out = alpha * out
+    if c is not None:
+        out = out + (beta * c if beta != 1.0 else c)
+    return out

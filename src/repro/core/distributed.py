@@ -1,0 +1,258 @@
+"""SPMD schedules for the distributed ``AᵀA`` product (paper §4.2 / §4.3).
+
+The paper's parallel insight: schedule the symmetric product as **disjoint,
+α-balanced tasks** over the lower triangle of C (threads/ranks never collide
+on writes), and **retrieve only packed lower-triangular payloads**. Its
+transport — MPI scatter/gather trees from a root rank — would serialize on
+one chip on a TPU pod, so the schedules here map the same insight onto
+jax-native SPMD (see DESIGN.md §2):
+
+* :func:`gram_rowshard` — A row-sharded (the ``C = Σ_p A_pᵀA_p`` view, i.e.
+  the C11 recursion collapsed onto the mesh): local ATA + one ``psum``.
+  This is the pure-DP gram used by the Shampoo optimizer for row-sharded
+  gradients.
+
+* :func:`ata_tile_parallel` — the ATA-S/ATA-D analogue. C's lower triangle
+  is tiled into ``nb(nb+1)/2`` uniform ``w×w`` tiles, assigned contiguously
+  to the devices of ``task_axis`` (uniform shapes keep the program SPMD);
+  each device computes its tiles with the sequential ATA/Strassen machinery
+  at the leaf level (paper §4.1.3: "Strassen can still be used at
+  leaf-level computation"). Partial sums over a ``row_axis`` (if A is also
+  row-sharded — the ATA-D two-level layout) are combined with a single
+  ``psum`` **of the packed tile stack** — ``T·w² ≈ n²/2`` words instead of
+  the dense ``n²``, reproducing the paper's packed-low(C) retrieval saving
+  (Prop. 4.2) as a collective-bytes saving.
+
+* :func:`gemm_tn_colshard` — the distributed FastStrassen companion:
+  ``C = AᵀB`` with B column-sharded; each device owns a disjoint column
+  stripe of C (no collision, no reduction).
+
+Correspondence with ``repro.core.task_tree``: the task tree is the faithful
+scheduler model (heterogeneous leaf shapes — fine for MPI ranks, hostile to
+SPMD). The block-cyclic tiling here is the shape-uniform realization of the
+same disjoint-task principle; `tests/test_distributed.py` checks that both
+cover the lower triangle exactly once and that flop balance matches the
+LPT model within the tile-granularity bound.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.ata import ata
+from repro.core.strassen import DEFAULT_N_BASE, strassen_tn
+
+__all__ = [
+    "gram_rowshard",
+    "ata_tile_parallel",
+    "gemm_tn_colshard",
+    "choose_tiling",
+]
+
+
+# ---------------------------------------------------------------------------
+# rowshard: C = Σ_p A_pᵀ A_p
+# ---------------------------------------------------------------------------
+
+
+def gram_rowshard(
+    a_local: jax.Array,
+    axis: str,
+    *,
+    n_base: int = DEFAULT_N_BASE,
+    variant: str = "strassen",
+    use_ata: bool = True,
+) -> jax.Array:
+    """Per-device gram + all-reduce. Call **inside** shard_map/pjit-manual.
+
+    ``a_local`` is this device's row block; the result is the full replicated
+    ``AᵀA``. The local product uses the sequential ATA algorithm, so the
+    paper's 2/3-Strassen flop saving applies on every chip.
+    """
+    local = (
+        ata(a_local, n_base=n_base, variant=variant)
+        if use_ata
+        else jax.lax.dot_general(
+            a_local, a_local, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    )
+    return jax.lax.psum(local, axis)
+
+
+# ---------------------------------------------------------------------------
+# tile-parallel: block-cyclic lower-triangle tiles over a mesh axis
+# ---------------------------------------------------------------------------
+
+
+def choose_tiling(n: int, p: int, target_tiles_per_dev: int = 2) -> tuple[int, int]:
+    """Pick (nb, w): nb stripe count, w stripe width (multiple of 8).
+
+    Wants: T = nb(nb+1)/2 ≥ p (enough tasks), small T mod p (balance),
+    w reasonably large (MXU efficiency). Searches a small static range.
+    """
+    nb_min = max(1, math.ceil((math.sqrt(8 * p + 1) - 1) / 2))
+    best = None
+    for nb in range(nb_min, 4 * nb_min + 8):
+        t = nb * (nb + 1) // 2
+        if t < p:
+            continue
+        per = -(-t // p)
+        waste = per * p - t
+        w = -(-n // nb)
+        w = -(-w // 8) * 8  # round width up to sublane multiple
+        score = (waste * w * w, -w)  # minimize wasted flops, prefer wide tiles
+        if best is None or score < best[0]:
+            best = (score, nb, w)
+        if t >= target_tiles_per_dev * p and waste == 0:
+            break
+    _, nb, w = best
+    return nb, w
+
+
+def _tri_coords_traced(t):
+    tf = t.astype(jnp.float32)
+    i = jnp.floor((jnp.sqrt(8.0 * tf + 1.0) - 1.0) / 2.0).astype(jnp.int32)
+    i = jnp.where((i + 1) * (i + 2) // 2 <= t, i + 1, i)
+    i = jnp.where(i * (i + 1) // 2 > t, i - 1, i)
+    j = t - i * (i + 1) // 2
+    return i, j
+
+
+def ata_tile_parallel(
+    a: jax.Array,
+    mesh: Mesh,
+    *,
+    task_axis: str = "model",
+    row_axis: Optional[str] = None,
+    alpha: float = 1.0,
+    n_base: int = DEFAULT_N_BASE,
+    variant: str = "strassen",
+    use_strassen: bool = True,
+    nb: Optional[int] = None,
+    interpret_tiles: bool = False,
+) -> jax.Array:
+    """Distributed ``C = alpha·AᵀA`` with disjoint lower-triangle tile tasks.
+
+    Args:
+      a: global ``(m, n)``. Sharded ``P(row_axis, None)`` if ``row_axis``
+        is given (m must divide the row_axis size), replicated otherwise.
+      mesh: the device mesh.
+      task_axis: mesh axis that owns disjoint C tiles (the "thread pool" of
+        ATA-S / the worker ranks of ATA-D).
+      row_axis: optional mesh axis across which the contraction dimension is
+        sharded (ATA-D's two-level layout). Partial tiles are psum'ed as a
+        packed stack (≈ n²/2 words — the paper's low(C) retrieval saving).
+      nb: stripe count override (default: :func:`choose_tiling`).
+
+    Returns:
+      Full symmetric ``(n, n)`` C, replicated over the mesh.
+    """
+    m, n = a.shape
+    p_task = mesh.shape[task_axis]
+    if nb is None:
+        nb, w = choose_tiling(n, p_task)
+    else:
+        w = -(-n // nb)
+        w = -(-w // 8) * 8
+    n_pad = nb * w
+    t_total = nb * (nb + 1) // 2
+    t_per = -(-t_total // p_task)
+
+    if n_pad > n:
+        a = jnp.pad(a, ((0, 0), (0, n_pad - n)))
+
+    def local_fn(a_local):
+        p = jax.lax.axis_index(task_axis)
+        ts = p * t_per + jnp.arange(t_per, dtype=jnp.int32)
+        ts = jnp.minimum(ts, t_total - 1)  # clamp dummies (recomputed, ignored)
+
+        def compute_tile(t):
+            i, j = _tri_coords_traced(t)
+            ai = jax.lax.dynamic_slice_in_dim(a_local, i * w, w, axis=1)
+            aj = jax.lax.dynamic_slice_in_dim(a_local, j * w, w, axis=1)
+            if use_strassen:
+                return strassen_tn(ai, aj, n_base=n_base, variant=variant)
+            return jax.lax.dot_general(
+                ai, aj, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+        # python-unrolled tile loop (t_per is small): keeps every tile's
+        # matmuls visible to XLA's cost model (lax.map would count the body
+        # once) and lets XLA schedule tiles independently.
+        tiles = jnp.stack([compute_tile(ts[q]) for q in range(t_per)])
+        if row_axis is not None:
+            # packed retrieval: reduce the tile stack, not a dense (n, n)
+            tiles = jax.lax.psum(tiles, row_axis)
+        return tiles
+
+    in_spec = P(row_axis, None) if row_axis else P(None, None)
+    tiles = jax.shard_map(
+        local_fn, mesh=mesh, in_specs=(in_spec,), out_specs=P(task_axis, None, None)
+    )(a)
+    # tiles: global (p_task * t_per, w, w); place tile g (= t for g < T) at
+    # its static (i, j) block position, then mirror the strict lower triangle.
+    c = jnp.zeros((n_pad, n_pad), dtype=tiles.dtype)
+    for t in range(t_total):
+        i = int((math.isqrt(8 * t + 1) - 1) // 2)
+        j = t - i * (i + 1) // 2
+        c = jax.lax.dynamic_update_slice(c, tiles[t], (i * w, j * w))
+    c = c[:n, :n]
+    c = jnp.tril(c) + jnp.tril(c, -1).T
+    if alpha != 1.0:
+        c = alpha * c
+    return c
+
+
+# ---------------------------------------------------------------------------
+# colshard gemm: C = AᵀB with B column-sharded (disjoint C column stripes)
+# ---------------------------------------------------------------------------
+
+
+def gemm_tn_colshard(
+    a: jax.Array,
+    b: jax.Array,
+    mesh: Mesh,
+    *,
+    task_axis: str = "model",
+    row_axis: Optional[str] = None,
+    n_base: int = DEFAULT_N_BASE,
+    variant: str = "strassen",
+    use_strassen: bool = True,
+) -> jax.Array:
+    """Distributed ``C = AᵀB``: each device owns C's column stripe for its
+    B shard — the FastStrassen leaves of the task tree, collision-free."""
+    m, n = a.shape
+    mb, k = b.shape
+    if m != mb:
+        raise ValueError(f"contraction mismatch {a.shape} vs {b.shape}")
+    p_task = mesh.shape[task_axis]
+    if k % p_task:
+        raise ValueError(f"k={k} must divide task axis {p_task}")
+
+    def local_fn(a_local, b_local):
+        if use_strassen:
+            c_local = strassen_tn(a_local, b_local, n_base=n_base, variant=variant)
+        else:
+            c_local = jax.lax.dot_general(
+                a_local, b_local, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        if row_axis is not None:
+            c_local = jax.lax.psum(c_local, row_axis)
+        return c_local
+
+    row_spec = row_axis if row_axis else None
+    return jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(row_spec, None), P(row_spec, task_axis)),
+        out_specs=P(None, task_axis),
+    )(a, b)

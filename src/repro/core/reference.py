@@ -1,0 +1,113 @@
+"""Naive reference implementations and exact flop counters for the ATA paper.
+
+These are the *oracles* against which the Strassen-based implementations
+(`repro.core.strassen`, `repro.core.ata`) and the Pallas kernels
+(`repro.kernels`) are validated, plus analytic flop counters that mirror the
+paper's cost model (Section 3.2):
+
+  * classical ``AᵀA`` (syrk):  ``m·n·(n+1)`` flops (n(n+1)/2 output entries,
+    2m flops each) — the paper's ``n²(n+1)`` for square matrices.
+  * classical ``AᵀB`` (gemm): ``2·m·n·k`` flops.
+  * Strassen ``AᵀB``:          recursive counter matching our cutoff.
+  * ATA ``AᵀA``:               recursive counter; paper Eq. (3):
+                               ``T(n) = 4T(n/2) + 2T_S(n/2) + 3(n/2)² ≈ (2/3)T_S``.
+
+The counters walk the *same* recursion (same floor/ceil splits, same cutoff)
+as the implementations, so they are exact for any rectangular shape, not just
+powers of two.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+__all__ = [
+    "syrk_ref",
+    "gemm_tn_ref",
+    "classical_syrk_flops",
+    "classical_gemm_flops",
+    "strassen_tn_flops",
+    "ata_flops",
+]
+
+
+def syrk_ref(a, alpha=1.0, c=None, beta=1.0):
+    """Classical ``C = alpha·AᵀA (+ beta·C)`` oracle (full symmetric output)."""
+    out = alpha * (a.T @ a)
+    if c is not None:
+        out = out + beta * c
+    return out
+
+
+def gemm_tn_ref(a, b, alpha=1.0, c=None, beta=1.0):
+    """Classical ``C = alpha·AᵀB (+ beta·C)`` oracle."""
+    out = alpha * (a.T @ b)
+    if c is not None:
+        out = out + beta * c
+    return out
+
+
+def classical_syrk_flops(m: int, n: int) -> int:
+    """Flops of classical syrk exploiting symmetry: n(n+1)/2 dots of length m."""
+    return m * n * (n + 1)
+
+
+def classical_gemm_flops(m: int, n: int, k: int) -> int:
+    """Flops of classical ``AᵀB`` with A:(m,n), B:(m,k)."""
+    return 2 * m * n * k
+
+
+@functools.lru_cache(maxsize=None)
+def strassen_tn_flops(m: int, n: int, k: int, n_base: int) -> int:
+    """Exact flop count of our rectangular TN Strassen (classical variant).
+
+    Mirrors ``repro.core.strassen.strassen_tn``: cutoff when any dim <= n_base,
+    odd dims padded up to even before splitting (the padded row/col costs are
+    counted, exactly as the compiled graph executes them).
+    """
+    if min(m, n, k) <= n_base:
+        return classical_gemm_flops(m, n, k)
+    # pad to even (virtual padding — the implementation pads then splits)
+    mp, np_, kp = m + (m & 1), n + (n & 1), k + (k & 1)
+    m2, n2, k2 = mp // 2, np_ // 2, kp // 2
+    mults = 7 * strassen_tn_flops(m2, n2, k2, n_base)
+    # classical Strassen: 10 operand-side additions (on (m2,n2)/(m2,k2) blocks)
+    # + 8 additions to combine the 7 products into 4 C blocks (on (n2,k2)).
+    adds = 5 * m2 * n2 + 5 * m2 * k2 + 8 * n2 * k2
+    return mults + adds
+
+
+@functools.lru_cache(maxsize=None)
+def strassen_tn_flops_winograd(m: int, n: int, k: int, n_base: int) -> int:
+    """Flop count for the Winograd variant (7 mults, 15 adds)."""
+    if min(m, n, k) <= n_base:
+        return classical_gemm_flops(m, n, k)
+    mp, np_, kp = m + (m & 1), n + (n & 1), k + (k & 1)
+    m2, n2, k2 = mp // 2, np_ // 2, kp // 2
+    mults = 7 * strassen_tn_flops_winograd(m2, n2, k2, n_base)
+    # Winograd: 4 A-side pre-additions, 4 B-side pre-additions, 7 combine adds.
+    adds = 4 * m2 * n2 + 4 * m2 * k2 + 7 * n2 * k2
+    return mults + adds
+
+
+@functools.lru_cache(maxsize=None)
+def ata_flops(m: int, n: int, n_base: int, winograd: bool = False) -> int:
+    """Exact flop count of ATA (Algorithm 1) with our cutoff.
+
+    4 recursive ATA calls + 2 Strassen TN calls + 2 block additions
+    (C11 and C22 accumulations, n/2 × n/2 each) + the C21 accumulation.
+    Asymptotically (2/3)·T_S(n) — verified by tests.
+    """
+    if min(m, n) <= n_base:
+        return classical_syrk_flops(m, n)
+    mp, np_ = m + (m & 1), n + (n & 1)
+    m2, n2 = mp // 2, np_ // 2
+    s = strassen_tn_flops_winograd if winograd else strassen_tn_flops
+    rec = 4 * ata_flops(m2, n2, n_base, winograd)
+    strassen = 2 * s(m2, n2, n2, n_base)
+    # additions: low(C11) and low(C22) accumulations exploit symmetry
+    # (n2(n2+1)/2 each) plus the full C21 accumulation (n2²).
+    adds = 2 * (n2 * (n2 + 1) // 2) + n2 * n2
+    return rec + strassen + adds

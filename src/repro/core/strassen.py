@@ -1,0 +1,208 @@
+"""Generalized rectangular Strassen for the TN product ``C = alpha·AᵀB``.
+
+This is the paper's FastStrassen (Algorithm 1, lines 14-18) adapted to JAX/TPU:
+
+* **Trace-time recursion** — the recursion runs in Python over static shapes
+  during ``jax.jit`` tracing and unrolls into an XLA graph. XLA's buffer
+  assignment plays the role of the paper's pre-allocated ``M, P, Q`` scratch
+  (Section 3.3): no per-level allocation happens at run time.
+
+* **TN form is preserved all the way down.** The paper notes that row-major
+  ``AᵀA`` is cache-hostile because access is column-wise; on TPU the fix is to
+  never materialize ``Aᵀ``. With ``X = Aᵀ`` split into quadrants,
+  ``X11 = A11ᵀ, X12 = A21ᵀ, X21 = A12ᵀ, X22 = A22ᵀ``, every one of Strassen's
+  seven products is again a TN product of *combinations of A blocks in their
+  original orientation* against combinations of B blocks. The base case hands
+  a TN ``dot_general`` (contracting dims ``((0,),(0,))``) to the MXU, which
+  consumes the transpose inside its dataflow for free.
+
+* **Odd sizes** — handled by zero-padding odd dims up to even at each level
+  and cropping the result (the paper's "virtual padding" of the ``axpy`` sums;
+  under XLA a 1-row ``lax.pad`` fuses, so the malloc/copy overhead the paper
+  engineers around does not exist here).
+
+* **Variants** — ``'strassen'`` (paper-faithful: 7 mults, 18 adds) and
+  ``'winograd'`` (beyond-paper: 7 mults, 15 adds; lowers the memory roofline
+  term).
+
+* **Base case** — recursion cuts off when any dimension ≤ ``n_base`` and hands
+  the tile to ``base_dot`` (default: MXU-dense ``dot_general``; the Pallas
+  ``gemm_tn`` kernel via ``repro.kernels.ops`` on TPU). On TPU the cutoff is
+  the analogue of the paper's "fits in cache": below it, Strassen's extra VPU
+  additions cost more than the MXU saves.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["strassen_tn", "DEFAULT_N_BASE"]
+
+# Default recursion cutoff. 512 keeps every base-case matmul dimension a
+# multiple of the 128-wide MXU while allowing 3-5 Strassen levels on the gram
+# shapes that appear in the framework (d_model/d_ff up to 33792).
+DEFAULT_N_BASE = 512
+
+
+def _dot_tn(a, b, acc_dtype):
+    """Base-case ``AᵀB`` without materializing ``Aᵀ`` (TN dot_general)."""
+    return jax.lax.dot_general(
+        a,
+        b,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    )
+
+
+def _pad_even(x):
+    """Zero-pad both dims of ``x`` up to even (virtual padding)."""
+    m, n = x.shape
+    pm, pn = m & 1, n & 1
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def _quadrants(x):
+    m, n = x.shape
+    m2, n2 = m // 2, n // 2
+    return (
+        x[:m2, :n2],
+        x[:m2, n2:],
+        x[m2:, :n2],
+        x[m2:, n2:],
+    )
+
+
+def _rec_strassen(a, b, n_base, base_dot, acc_dtype):
+    """Classical Strassen recursion on the TN product (7 mults, 18 adds)."""
+    m, n = a.shape
+    _, k = b.shape
+    if min(m, n, k) <= n_base:
+        return base_dot(a, b)
+
+    a = _pad_even(a)
+    b = _pad_even(b)
+    a11, a12, a21, a22 = _quadrants(a)
+    b11, b12, b21, b22 = _quadrants(b)
+
+    rec = functools.partial(
+        _rec_strassen, n_base=n_base, base_dot=base_dot, acc_dtype=acc_dtype
+    )
+    # With X = Aᵀ: X11=A11ᵀ X12=A21ᵀ X21=A12ᵀ X22=A22ᵀ. Classical formulas:
+    m1 = rec(a11 + a22, b11 + b22)  # (X11+X22)(Y11+Y22)
+    m2 = rec(a12 + a22, b11)        # (X21+X22)Y11
+    m3 = rec(a11, b12 - b22)        # X11(Y12-Y22)
+    m4 = rec(a22, b21 - b11)        # X22(Y21-Y11)
+    m5 = rec(a11 + a21, b22)        # (X11+X12)Y22
+    m6 = rec(a12 - a11, b11 + b12)  # (X21-X11)(Y11+Y12)
+    m7 = rec(a21 - a22, b21 + b22)  # (X12-X22)(Y21+Y22)
+
+    c11 = m1 + m4 - m5 + m7
+    c12 = m3 + m5
+    c21 = m2 + m4
+    c22 = m1 - m2 + m3 + m6
+
+    c = jnp.block([[c11, c12], [c21, c22]])
+    return c[:n, :k]
+
+
+def _rec_winograd(a, b, n_base, base_dot, acc_dtype):
+    """Strassen-Winograd recursion (7 mults, 15 adds) — beyond-paper variant."""
+    m, n = a.shape
+    _, k = b.shape
+    if min(m, n, k) <= n_base:
+        return base_dot(a, b)
+
+    a = _pad_even(a)
+    b = _pad_even(b)
+    a11, a12, a21, a22 = _quadrants(a)
+    b11, b12, b21, b22 = _quadrants(b)
+
+    rec = functools.partial(
+        _rec_winograd, n_base=n_base, base_dot=base_dot, acc_dtype=acc_dtype
+    )
+    # X blocks in A-space: X11=A11 X12=A21 X21=A12 X22=A22 (all transposed
+    # implicitly by the TN product). Winograd schedule:
+    s1 = a12 + a22          # X21 + X22
+    s2 = s1 - a11           # S1 - X11
+    s3 = a11 - a12          # X11 - X21
+    s4 = a21 - s2           # X12 - S2
+    t1 = b12 - b11          # Y12 - Y11
+    t2 = b22 - t1           # Y22 - T1
+    t3 = b22 - b12          # Y22 - Y12
+    t4 = t2 - b21           # T2 - Y21
+
+    p1 = rec(a11, b11)      # X11 Y11
+    p2 = rec(a21, b21)      # X12 Y21
+    p3 = rec(s4, b22)       # S4 Y22
+    p4 = rec(a22, t4)       # X22 T4
+    p5 = rec(s1, t1)        # S1 T1
+    p6 = rec(s2, t2)        # S2 T2
+    p7 = rec(s3, t3)        # S3 T3
+
+    u2 = p1 + p6
+    u3 = u2 + p7
+    u4 = u2 + p5
+
+    c11 = p1 + p2
+    c12 = u4 + p3
+    c21 = u3 - p4
+    c22 = u3 + p5
+
+    c = jnp.block([[c11, c12], [c21, c22]])
+    return c[:n, :k]
+
+
+def strassen_tn(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    alpha: float = 1.0,
+    c: Optional[jax.Array] = None,
+    beta: float = 1.0,
+    n_base: int = DEFAULT_N_BASE,
+    variant: str = "strassen",
+    base_dot: Optional[Callable] = None,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """``C = alpha·AᵀB (+ beta·C)`` via rectangular TN Strassen.
+
+    Args:
+      a: ``(m, n)`` left operand (used transposed, never materialized as Aᵀ).
+      b: ``(m, k)`` right operand.
+      alpha, c, beta: optional scaling/accumulation, BLAS-style.
+      n_base: recursion cutoff — any dim ≤ n_base goes to the base matmul.
+      variant: ``'strassen'`` (paper-faithful) or ``'winograd'`` (15 adds).
+      base_dot: base-case TN matmul ``f(a, b) -> aᵀb``. Defaults to a TN
+        ``dot_general`` (MXU-native). Pass ``repro.kernels.ops.gemm_tn`` to
+        use the Pallas kernel.
+      acc_dtype: accumulation dtype for the base matmul
+        (``preferred_element_type``).
+
+    Returns:
+      ``(n, k)`` product in ``acc_dtype`` (or the base_dot's output dtype).
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"strassen_tn expects 2-D operands, got {a.shape}, {b.shape}")
+    if a.shape[0] != b.shape[0]:
+        raise ValueError(
+            f"contracting dims mismatch: A is {a.shape}, B is {b.shape} "
+            "(TN product contracts dim 0 of both)"
+        )
+    if variant not in ("strassen", "winograd"):
+        raise ValueError(f"unknown variant {variant!r}")
+    if base_dot is None:
+        base_dot = functools.partial(_dot_tn, acc_dtype=acc_dtype)
+
+    rec = _rec_strassen if variant == "strassen" else _rec_winograd
+    out = rec(a, b, n_base=n_base, base_dot=base_dot, acc_dtype=acc_dtype)
+    if alpha != 1.0:
+        out = alpha * out
+    if c is not None:
+        out = out + (beta * c if beta != 1.0 else c)
+    return out

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+* ``syrk``   — lower-triangular ``alpha·AᵀA`` (ATA base case; the paper's
+  symmetric saving at the tile level).
+* ``gemm_tn``— TN matmul ``alpha·AᵀB`` (FastStrassen base case; Aᵀ never
+  materialized).
+
+``ops`` holds the jit'd public wrappers (interpret-mode on CPU); ``ref``
+holds the pure-jnp oracles used by the kernel test sweeps.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import gemm_tn, syrk
+
+__all__ = ["ops", "ref", "gemm_tn", "syrk"]

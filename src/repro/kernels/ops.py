@@ -1,0 +1,55 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On TPU the kernels compile through Mosaic; on CPU (this container) they run
+in ``interpret=True`` mode, which executes the kernel body in Python for
+correctness validation. ``repro.core.ata``/``strassen_tn`` accept these as
+``base_syrk``/``base_dot`` so the whole recursion bottoms out in the kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gemm_tn import DEFAULT_BLOCKS as GEMM_BLOCKS
+from repro.kernels.gemm_tn import gemm_tn_pallas
+from repro.kernels.syrk import DEFAULT_BLOCKS as SYRK_BLOCKS
+from repro.kernels.syrk import syrk_pallas
+
+__all__ = ["syrk", "gemm_tn", "interpret_default"]
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode unless running on a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def syrk(a, *, alpha: float = 1.0, blocks=None, interpret=None, out_dtype=jnp.float32):
+    """``alpha·AᵀA`` via the Pallas lower-triangular syrk kernel."""
+    if interpret is None:
+        interpret = interpret_default()
+    return syrk_pallas(
+        a,
+        alpha=alpha,
+        blocks=tuple(blocks or SYRK_BLOCKS),
+        interpret=interpret,
+        out_dtype=out_dtype,
+    )
+
+
+def gemm_tn(
+    a, b, *, alpha: float = 1.0, blocks=None, interpret=None, out_dtype=jnp.float32
+):
+    """``alpha·AᵀB`` via the Pallas TN matmul kernel."""
+    if interpret is None:
+        interpret = interpret_default()
+    return gemm_tn_pallas(
+        a,
+        b,
+        alpha=alpha,
+        blocks=tuple(blocks or GEMM_BLOCKS),
+        interpret=interpret,
+        out_dtype=out_dtype,
+    )

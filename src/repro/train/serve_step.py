@@ -1,0 +1,55 @@
+"""Serving steps: prefill (cache construction + first logits) and decode
+(one token per sequence against the KV/SSM cache), plus sampling."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import forward_decode, forward_train
+
+__all__ = ["make_prefill_step", "make_decode_step", "sample_logits"]
+
+
+def sample_logits(
+    logits: jax.Array, key, temperature: float = 1.0, vocab_real: Optional[int] = None
+) -> jax.Array:
+    """Temperature sampling over the last position. logits: (B, 1, [K,] V)."""
+    lg = logits.astype(jnp.float32)
+    if vocab_real is not None and lg.shape[-1] > vocab_real:
+        mask = jnp.arange(lg.shape[-1]) >= vocab_real
+        lg = jnp.where(mask, -1e30, lg)
+    if temperature <= 0.0:
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, lg / temperature, axis=-1).astype(jnp.int32)
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                      compute_dtype=jnp.bfloat16, cache_len: Optional[int] = None):
+    """prefill(params, batch) -> (last_logits, cache). The cache is laid out
+    for the decode step (absolute slots; ring buffers for SWA layers)."""
+
+    def prefill(params, batch):
+        logits, _aux, cache = forward_train(
+            params, batch, cfg, mesh,
+            compute_dtype=compute_dtype, return_cache=True, cache_len=cache_len,
+        )
+        return logits[:, -1:], cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                     compute_dtype=jnp.bfloat16):
+    """decode(params, tokens, cache, pos) -> (logits, new_cache)."""
+
+    def decode(params, tokens, cache, pos):
+        return forward_decode(
+            params, tokens, cache, pos, cfg, mesh, compute_dtype=compute_dtype
+        )
+
+    return decode

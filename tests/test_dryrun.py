@@ -1,0 +1,78 @@
+"""Dry-run machinery tests.
+
+One real (reduced-cost) dry-run cell runs in a subprocess with the full
+512-fake-device production mesh — the minimal end-to-end proof that the
+lower+compile pipeline works inside the test suite. The full 40-cell × 2-mesh
+sweep runs via ``python -m repro.launch.dryrun --all`` (results recorded in
+EXPERIMENTS.md §Dry-run).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis.hlo import collective_bytes, collective_seconds
+
+
+def test_collective_bytes_parsing():
+    hlo = """
+  %ar = f32[128,1024]{1,0} all-reduce(f32[128,1024]{1,0} %p0), replica_groups=
+  %ag.1 = bf16[64,64]{1,0} all-gather-start(bf16[32,64]{1,0} %p1), dim=0
+  %ag.2 = bf16[64,64]{1,0} all-gather-done(bf16[64,64]{1,0} %ag.1)
+  %tup = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(f32[8,8] %a, f32[8,8] %b)
+  %cp = u8[16]{0} collective-permute(u8[16]{0} %x), source_target_pairs=
+  %rs = f32[4,4]{1,0} reduce-scatter(f32[16,4]{1,0} %y), dimensions={0}
+"""
+    got = collective_bytes(hlo)
+    assert got["all-reduce"] == 128 * 1024 * 4
+    assert got["all-gather"] == 64 * 64 * 2          # start only, not done
+    assert got["all-to-all"] == 2 * 8 * 8 * 4        # tuple result
+    assert got["collective-permute"] == 16
+    assert got["reduce-scatter"] == 4 * 4 * 4
+
+
+def test_collective_seconds_model():
+    t = collective_seconds({"all-reduce": 100e9, "all-gather": 50e9}, link_bw=50e9)
+    assert t == pytest.approx(2 * 2.0 + 1.0)  # AR counts 2×
+
+
+def test_roofline_affine_composition():
+    from repro.analysis.roofline import _affine, _cost_vec, _hybrid
+
+    a1 = {"cost": {"flops": 10.0, "bytes_accessed": 100.0},
+          "collectives": {"all-reduce": 4}}
+    a2 = {"cost": {"flops": 16.0, "bytes_accessed": 160.0},
+          "collectives": {"all-reduce": 6}}
+    v = _affine(_cost_vec(a1), _cost_vec(a2), 10)
+    assert v["flops"] == pytest.approx(4 + 10 * 6)       # fix=4, layer=6
+    assert v["bytes"] == pytest.approx(40 + 10 * 60)
+    assert v["coll_all-reduce"] == pytest.approx(2 + 10 * 2)
+
+    # hybrid: fix=5, g=7, s=3
+    g1 = {"cost": {"flops": 12.0, "bytes_accessed": 0.0}, "collectives": {}}
+    gs2 = {"cost": {"flops": 15.0, "bytes_accessed": 0.0}, "collectives": {}}
+    ss2 = {"cost": {"flops": 11.0, "bytes_accessed": 0.0}, "collectives": {}}
+    v = _hybrid(_cost_vec(g1), _cost_vec(gs2), _cost_vec(ss2), n_g=3, n_s=29)
+    assert v["flops"] == pytest.approx(5 + 3 * 7 + 29 * 3)
+
+
+@pytest.mark.slow
+def test_one_production_cell_compiles():
+    """qwen1.5-0.5b × decode_32k on the 16×16 mesh, end to end (subprocess)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src")
+    out_dir = "/tmp/repro_dryrun_test"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen1.5-0.5b", "--shape", "decode_32k",
+         "--mesh", "single", "--no-analysis", "--out", out_dir],
+        env=env, capture_output=True, text=True, timeout=1200,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.load(open(os.path.join(out_dir, "qwen1.5-0.5b__decode_32k__single.json")))
+    assert rec["status"] == "ok"
+    mem = rec["artifacts"]["main"]["memory"]
+    assert 0 < mem["peak_bytes_est"] < 16 * 2**30  # fits a v5e chip

@@ -1,0 +1,164 @@
+"""Tests for AdamW, ATA-powered Shampoo, and PowerSGD compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw, apply_updates, constant, shampoo, warmup_cosine
+from repro.optim.adamw import clip_by_global_norm, global_norm
+from repro.optim.powersgd import compress, decompress, init_state
+from repro.optim.shampoo import inverse_pth_root
+
+
+def _quadratic_params(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": jax.random.normal(k1, (16, 8), jnp.float32),
+        "b": jax.random.normal(k2, (8,), jnp.float32),
+    }
+
+
+def _loss(params, x, y):
+    pred = x @ params["w"] + params["b"]
+    return jnp.mean((pred - y) ** 2)
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: adamw(constant(1e-2)),
+    lambda: shampoo(constant(1e-2), block=8, update_every=2, n_base=4),
+], ids=["adamw", "shampoo"])
+def test_optimizer_decreases_loss(make_opt):
+    key = jax.random.key(0)
+    params = _quadratic_params(key)
+    x = jax.random.normal(jax.random.key(1), (64, 16))
+    w_true = jax.random.normal(jax.random.key(2), (16, 8))
+    y = x @ w_true
+
+    opt = make_opt()
+    state = opt.init(params)
+    loss0 = float(_loss(params, x, y))
+
+    @jax.jit
+    def step(params, state):
+        loss, grads = jax.value_and_grad(_loss)(params, x, y)
+        updates, state = opt.update(grads, state, params)
+        return apply_updates(params, updates), state, loss
+
+    for _ in range(60):
+        params, state, loss = step(params, state)
+    assert float(loss) < 0.5 * loss0
+    for leaf in jax.tree.leaves(params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_warmup_cosine_shape():
+    sched = warmup_cosine(1.0, 10, 100)
+    assert float(sched(jnp.asarray(0))) == 0.0
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(sched(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-5)
+    assert float(sched(jnp.asarray(55))) < 1.0
+
+
+def test_global_norm_clip():
+    tree = {"a": jnp.ones((10,)) * 3.0, "b": jnp.ones((10,)) * 4.0}
+    n = float(global_norm(tree))
+    assert n == pytest.approx(np.sqrt(90 + 160))
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_inverse_pth_root_matches_eigh():
+    r = np.random.default_rng(0)
+    x = r.standard_normal((32, 32)).astype(np.float32)
+    a = x @ x.T + 0.1 * np.eye(32, dtype=np.float32)
+    got = np.asarray(inverse_pth_root(jnp.asarray(a), p=4, iters=40, ridge=0.0))
+    w, v = np.linalg.eigh(a)
+    want = (v * w ** -0.25) @ v.T
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_inverse_pth_root_p2():
+    r = np.random.default_rng(1)
+    x = r.standard_normal((16, 16)).astype(np.float32)
+    a = x @ x.T + 0.5 * np.eye(16, dtype=np.float32)
+    got = np.asarray(inverse_pth_root(jnp.asarray(a), p=2, iters=40, ridge=0.0))
+    w, v = np.linalg.eigh(a)
+    want = (v * w ** -0.5) @ v.T
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_shampoo_stats_are_ata_grams():
+    """The L/R statistics must equal decayed G·Gᵀ / GᵀG gram sums."""
+    opt = shampoo(constant(1e-2), block=16, update_every=1, stat_decay=0.5, n_base=4)
+    params = {"w": jnp.zeros((16, 16), jnp.float32)}
+    g = jax.random.normal(jax.random.key(3), (16, 16), jnp.float32)
+    state = opt.init(params)
+    _, state = opt.update({"w": g}, state, params)
+    l = np.asarray(state["shampoo"]["w"]["l"][0])
+    r_stat = np.asarray(state["shampoo"]["w"]["r"][0])
+    np.testing.assert_allclose(l, 0.5 * np.asarray(g @ g.T), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(r_stat, 0.5 * np.asarray(g.T @ g), rtol=1e-4, atol=1e-4)
+
+
+def test_shampoo_skips_embeddings():
+    opt = shampoo(constant(1e-2), block=8)
+    params = {"embed": jnp.zeros((32, 8)), "layers": {"w": jnp.zeros((16, 8))}}
+    state = opt.init(params)
+    assert state["shampoo"]["embed"] == 0            # Adam fallback
+    assert isinstance(state["shampoo"]["layers"]["w"], dict)
+
+
+def test_shampoo_blocked_partitioning_roundtrip():
+    from repro.optim.shampoo import _from_blocks, _plan, _to_blocks
+
+    g = jax.random.normal(jax.random.key(4), (40, 24), jnp.float32)
+    pt = _plan(g.shape, 16)
+    blocks = _to_blocks(g, pt)
+    assert blocks.shape == (pt.n1 * pt.n2, pt.b1, pt.b2)
+    back = _from_blocks(blocks, pt, g.shape)
+    np.testing.assert_allclose(back, g, rtol=1e-6)
+
+
+# --- PowerSGD ---------------------------------------------------------------
+
+
+def test_powersgd_rank_sufficient_exact():
+    """If rank ≥ rank(G), compression is (nearly) lossless after one step."""
+    r = np.random.default_rng(5)
+    u = r.standard_normal((32, 4)).astype(np.float32)
+    v = r.standard_normal((24, 4)).astype(np.float32)
+    g = jnp.asarray(u @ v.T)
+    state = init_state(jax.random.key(0), g.shape, rank=8)
+    p, q, state = compress(g, state, n_base=8)
+    g_hat = decompress(p, q)
+    np.testing.assert_allclose(g_hat, g, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(state.error), 0.0, atol=1e-3)
+
+
+def test_powersgd_error_feedback_accumulates():
+    r = np.random.default_rng(6)
+    g = jnp.asarray(r.standard_normal((32, 24)).astype(np.float32))
+    state = init_state(jax.random.key(1), g.shape, rank=2)
+    total_hat = jnp.zeros_like(g)
+    rels = []
+    for i in range(30):
+        p, q, state = compress(g, state, n_base=8)
+        total_hat = total_hat + decompress(p, q)
+        avg = np.asarray(total_hat / (i + 1))
+        rels.append(np.linalg.norm(avg - np.asarray(g)) / np.linalg.norm(np.asarray(g)))
+    # over repeated rounds of the same gradient, error feedback makes the
+    # *average* reconstruction approach g (rank 2 of 24 on a flat spectrum →
+    # measured ≈0.56@10 / 0.23@30, monotone decreasing)
+    assert rels[-1] < 0.3, rels[-1]
+    assert rels[-1] < rels[9] < rels[4]
+
+
+def test_powersgd_orthonormal_p():
+    from repro.optim.powersgd import _orthonormalize
+
+    r = np.random.default_rng(7)
+    p = jnp.asarray(r.standard_normal((64, 6)).astype(np.float32))
+    po = _orthonormalize(p)
+    gram = np.asarray(po.T @ po)
+    np.testing.assert_allclose(gram, np.eye(6), rtol=1e-3, atol=1e-3)
