@@ -1,9 +1,16 @@
 """Paper Figure 3: sequential ATA vs the classical syrk (`dsyrk` analogue).
 
 Compares ``repro.core.ata`` (Strassen-based, 2/3·T_S flops) against the
-XLA-native classical ``AᵀA`` on square and tall matrices of growing size.
-Derived column: effective GFLOPs (Eq. 9, r=1) for both, the measured
-speedup, and the analytic flop ratio at that size/cutoff.
+XLA-native classical ``AᵀA`` on square and tall matrices of growing size,
+in both output modes:
+
+  * ``dense``  — full square, one root mirror;
+  * ``packed`` — mirror-free ``SymmetricMatrix`` output (the storage half of
+    the paper's symmetry claim). Must be at parity or faster than dense.
+
+Derived column: effective GFLOPs (Eq. 9 with the actual m·n² shape, r=1)
+for each path, the measured speedups, and the analytic flop ratio at that
+size/cutoff.
 """
 
 from __future__ import annotations
@@ -12,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import effective_gflops, emit, time_fn
+from benchmarks.common import effective_gflops, emit, time_fn, time_pair
 from repro.core import ata
 from repro.core.reference import ata_flops, classical_syrk_flops
 
@@ -25,20 +32,39 @@ def run():
         a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
 
         f_ata = jax.jit(lambda a: ata(a, n_base=N_BASE))
+        f_packed = jax.jit(lambda a: ata(a, n_base=N_BASE, out="packed"))
         f_ref = jax.jit(
             lambda a: jax.lax.dot_general(
                 a, a, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
             )
         )
-        t_ata = time_fn(f_ata, a)
+        # dense/packed interleaved: their *ratio* is the claim under test,
+        # and this container's background load drifts on a seconds scale.
+        t_ata, t_packed = time_pair(f_ata, f_packed, a)
         t_ref = time_fn(f_ref, a)
         flop_ratio = ata_flops(m, n, N_BASE) / classical_syrk_flops(m, n)
         emit(
             f"fig3_ata_{m}x{n}",
             t_ata,
-            f"eff_gflops={effective_gflops(n, t_ata):.2f} "
-            f"ref_gflops={effective_gflops(n, t_ref):.2f} "
+            f"eff_gflops={effective_gflops(m, n, t_ata):.2f} "
+            f"ref_gflops={effective_gflops(m, n, t_ref):.2f} "
             f"speedup={t_ref / t_ata:.3f} flop_ratio={flop_ratio:.3f}",
+            shape=(m, n),
+            gflops=effective_gflops(m, n, t_ata),
+            mode="dense",
+            ref_seconds=t_ref,
+        )
+        emit(
+            f"fig3_ata_packed_{m}x{n}",
+            t_packed,
+            f"eff_gflops={effective_gflops(m, n, t_packed):.2f} "
+            f"vs_dense={t_ata / t_packed:.3f} "
+            f"speedup={t_ref / t_packed:.3f} flop_ratio={flop_ratio:.3f}",
+            shape=(m, n),
+            gflops=effective_gflops(m, n, t_packed),
+            mode="packed",
+            dense_seconds=t_ata,
+            packed_vs_dense_speedup=round(t_ata / t_packed, 4),
         )
 
 

@@ -24,8 +24,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.distributed import ata_tile_parallel
 devs = len(jax.devices())
 d = {d}; m = devs // d
-mesh = jax.make_mesh((d, m), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((d, m), ("data", "model"))
 r = np.random.default_rng(0)
 a_host = r.standard_normal(({m_}, {n})).astype(np.float32)
 f = jax.jit(lambda a: ata_tile_parallel(a, mesh, task_axis="model",

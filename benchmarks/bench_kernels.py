@@ -1,9 +1,11 @@
 """Kernel-level microbench: Pallas syrk / gemm_tn (interpret mode on CPU)
-vs their pure-jnp oracles, plus the analytic MXU-work saving of the
-triangular grid (lower blocks only — the paper's low(C) saving at tile
-level). Interpret-mode timings are NOT hardware numbers (the kernel body
-runs in Python); the derived column therefore reports the *structural*
-quantities the TPU run would inherit: grid sizes and flop fractions.
+vs their pure-jnp oracles, plus the analytic MXU-work and HBM-write savings
+of the triangular grid (lower blocks only — the paper's low(C) saving at
+tile level, now kept through the output: packed storage or in-kernel
+dual-write, no mirror post-pass). Interpret-mode timings are NOT hardware
+numbers (the kernel body runs in Python); the derived column therefore
+reports the *structural* quantities the TPU run would inherit: grid sizes,
+flop fractions, and modeled HBM write bytes per output mode.
 """
 
 from __future__ import annotations
@@ -12,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.analysis.roofline import syrk_write_traffic
 from repro.kernels import gemm_tn, syrk
 from repro.kernels.ref import gemm_tn_ref, syrk_ref
 
@@ -23,20 +26,63 @@ def run():
     bm, bn = 256, 128
     nb = -(-n // bn)
     tri = nb * (nb + 1) // 2
+    wr = {mode: syrk_write_traffic(n, bn, mode) for mode in ("packed", "dual", "mirror")}
     t = time_fn(lambda a: syrk(a, blocks=(bm, bn), interpret=True), a, iters=2, warmup=1)
     emit(
         f"kernel_syrk_{m}x{n}",
         t,
         f"grid_tiles={tri} full_tiles={nb*nb} "
-        f"mxu_work_fraction={tri/(nb*nb):.3f} interpret=True",
+        f"mxu_work_fraction={tri/(nb*nb):.3f} "
+        f"write_bytes_dual={wr['dual']} write_bytes_seed_mirror={wr['mirror']} "
+        f"interpret=True",
+        shape=(m, n),
+        mode="dense",
+        grid_tiles=tri,
+        write_bytes=wr["dual"],
+    )
+    t_packed = time_fn(
+        lambda a: syrk(a, blocks=(bm, bn), interpret=True, out="packed"),
+        a, iters=2, warmup=1,
+    )
+    emit(
+        f"kernel_syrk_packed_{m}x{n}",
+        t_packed,
+        f"out_blocks={tri} dense_blocks={nb*nb} "
+        f"write_bytes={wr['packed']} write_fraction_vs_dual="
+        f"{wr['packed']/wr['dual']:.3f} interpret=True",
+        shape=(m, n),
+        mode="packed",
+        grid_tiles=tri,
+        write_bytes=wr["packed"],
+    )
+    # batched: one launch over a leading batch grid dimension (no vmap)
+    ab = jnp.asarray(rng.standard_normal((4, m // 2, n // 2)), jnp.float32)
+    t_b = time_fn(
+        lambda x: syrk(x, blocks=(bm, bn), interpret=True, out="packed"),
+        ab, iters=2, warmup=1,
+    )
+    emit(
+        f"kernel_syrk_batched_4x{m//2}x{n//2}",
+        t_b,
+        "batch_grid=leading-dim interpret=True",
+        shape=(4, m // 2, n // 2),
+        mode="packed",
     )
     b = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
     t = time_fn(lambda a, b: gemm_tn(a, b, blocks=(bm, bn, bn), interpret=True),
                 a, b, iters=2, warmup=1)
-    emit(f"kernel_gemm_tn_{m}x{n}", t, f"grid_tiles={nb*nb} interpret=True")
-    # correctness cross-check in the bench harness itself
+    emit(f"kernel_gemm_tn_{m}x{n}", t, f"grid_tiles={nb*nb} interpret=True",
+         shape=(m, n))
+    # correctness cross-checks in the bench harness itself
     err = float(jnp.abs(syrk(a, blocks=(bm, bn), interpret=True) - syrk_ref(a)).max())
     emit("kernel_syrk_maxerr", 0.0, f"max_abs_err={err:.2e}")
+    err_p = float(
+        jnp.abs(
+            syrk(a, blocks=(bm, bn), interpret=True, out="packed").to_dense()
+            - syrk_ref(a)
+        ).max()
+    )
+    emit("kernel_syrk_packed_maxerr", 0.0, f"max_abs_err={err_p:.2e}")
 
 
 if __name__ == "__main__":

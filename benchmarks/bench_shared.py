@@ -19,9 +19,9 @@ from repro.core.task_tree import ell_shared, modeled_speedup
 
 _CHILD = r"""
 import jax, jax.numpy as jnp, numpy as np, time
+from repro.compat import make_mesh
 from repro.core.distributed import ata_tile_parallel
-mesh = jax.make_mesh((len(jax.devices()),), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((len(jax.devices()),), ("model",))
 r = np.random.default_rng(0)
 a = jnp.asarray(r.standard_normal(({m}, {n})), jnp.float32)
 f = jax.jit(lambda a: ata_tile_parallel(a, mesh, task_axis="model", n_base=256))

@@ -43,10 +43,12 @@ def run():
         emit(
             f"fig4_strassen_{m}x{n}x{k}",
             t_st,
-            f"eff_gflops={effective_gflops(n, t_st, r=2):.2f} "
+            f"eff_gflops={effective_gflops(m, n, t_st, r=2, k=k):.2f} "
             f"winograd_us={t_wg*1e6:.1f} ref_us={t_ref*1e6:.1f} "
             f"nojit_us={t_nojit*1e6:.1f} speedup={t_ref/t_st:.3f} "
             f"flop_ratio={ratio:.3f}",
+            shape=(m, n, k),
+            gflops=effective_gflops(m, n, t_st, r=2, k=k),
         )
 
 

@@ -1,4 +1,5 @@
-"""Shared benchmark helpers: timing, CSV output, effective-GFLOPs metric."""
+"""Shared benchmark helpers: timing, CSV output, effective-GFLOPs metric,
+and machine-readable row collection (``BENCH_*.json``, written by ``run.py``)."""
 
 from __future__ import annotations
 
@@ -7,7 +8,11 @@ import time
 import jax
 import numpy as np
 
-__all__ = ["time_fn", "effective_gflops", "emit"]
+__all__ = ["time_fn", "time_pair", "effective_gflops", "emit", "drain_rows"]
+
+# rows emitted since the last drain — run.py drains after each bench module
+# and writes them to BENCH_<module>.json so the perf trajectory is tracked.
+_ROWS: list = []
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
@@ -24,12 +29,52 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
     return float(np.median(ts))
 
 
-def effective_gflops(n: int, seconds: float, r: int = 1) -> float:
-    """Paper Eq. (9): r·n³ / (time·1e9); r=1 for AᵀA-specialized algorithms,
-    r=2 for general matmul — comparable across classical & fast algorithms."""
-    return r * n**3 / (seconds * 1e9)
+def time_pair(fn_a, fn_b, *args, iters: int = 7, warmup: int = 2):
+    """Median wall times of two functions measured **interleaved** (A, B,
+    A, B, …) so background load drift hits both equally — use this when the
+    quantity of interest is the ratio between the two (e.g. packed vs dense
+    on a shared, throttled CPU container)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a(*args))
+        jax.block_until_ready(fn_b(*args))
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args))
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args))
+        tb.append(time.perf_counter() - t0)
+    return float(np.median(ta)), float(np.median(tb))
 
 
-def emit(name: str, seconds: float, derived: str):
-    """CSV row: name,us_per_call,derived."""
+def effective_gflops(m: int, n: int, seconds: float, r: int = 1, k: int | None = None) -> float:
+    """Paper Eq. (9) with the *actual* rectangular shape: ``r·m·n·k / time``.
+
+    ``r=1`` for AᵀA-specialized algorithms (A is m×n, C is n×n → m·n² useful
+    flops), ``r=2`` for general matmul — comparable across classical & fast
+    algorithms. ``k`` defaults to ``n`` (the syrk case); pass it explicitly
+    for rectangular gemm outputs. The seed used ``n³`` regardless of shape,
+    which overstated tall-skinny syrk GFLOPs by m/n.
+    """
+    k = n if k is None else k
+    return r * m * n * k / (seconds * 1e9)
+
+
+def emit(name: str, seconds: float, derived: str, *, shape=None, gflops=None, **extra):
+    """CSV row ``name,us_per_call,derived`` + JSON row for BENCH_*.json."""
     print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)
+    row = {"name": name, "seconds": seconds, "derived": derived}
+    if shape is not None:
+        row["shape"] = list(shape)
+    if gflops is not None:
+        row["gflops"] = round(float(gflops), 3)
+    row.update(extra)
+    _ROWS.append(row)
+
+
+def drain_rows() -> list:
+    """Return and clear rows emitted since the last drain."""
+    rows = list(_ROWS)
+    _ROWS.clear()
+    return rows

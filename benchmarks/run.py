@@ -1,34 +1,53 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and, per module, writes a
+machine-readable ``BENCH_<key>.json`` (list of ``{name, shape, seconds,
+gflops, ...}`` rows) so the perf trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run            # all benches
     PYTHONPATH=src python -m benchmarks.run fig3 fig5  # filter by prefix
+    PYTHONPATH=src python -m benchmarks.run --out results/bench
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
 
+from benchmarks import common
+
+# (display name, module, BENCH json key)
 BENCHES = [
-    ("fig3_ata_vs_syrk", "benchmarks.bench_ata"),
-    ("fig4_faststrassen_vs_gemm", "benchmarks.bench_strassen"),
-    ("fig5_shared_memory_scaling", "benchmarks.bench_shared"),
-    ("fig6_distributed_scaling", "benchmarks.bench_distributed"),
-    ("kernels_pallas", "benchmarks.bench_kernels"),
-    ("shampoo_integration", "benchmarks.bench_shampoo"),
+    ("fig3_ata_vs_syrk", "benchmarks.bench_ata", "ata"),
+    ("fig4_faststrassen_vs_gemm", "benchmarks.bench_strassen", "strassen"),
+    ("fig5_shared_memory_scaling", "benchmarks.bench_shared", "shared"),
+    ("fig6_distributed_scaling", "benchmarks.bench_distributed", "distributed"),
+    ("kernels_pallas", "benchmarks.bench_kernels", "kernels"),
+    ("shampoo_integration", "benchmarks.bench_shampoo", "shampoo"),
 ]
 
 
 def main() -> None:
-    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    args = sys.argv[1:]
+    out_dir = "."
+    if "--out" in args:
+        i = args.index("--out")
+        if i + 1 >= len(args) or args[i + 1].startswith("-"):
+            raise SystemExit("usage: benchmarks.run [--out DIR] [filter ...]")
+        out_dir = args[i + 1]
+        args = args[:i] + args[i + 2 :]
+        os.makedirs(out_dir, exist_ok=True)
+    filters = [a for a in args if not a.startswith("-")]
     print("name,us_per_call,derived")
     failed = []
-    for name, module in BENCHES:
+    for name, module, key in BENCHES:
         if filters and not any(f in name for f in filters):
             continue
         print(f"# --- {name} ({module}) ---", flush=True)
+        common.drain_rows()  # isolate rows per module
+        path = os.path.join(out_dir, f"BENCH_{key}.json")
         try:
             mod = __import__(module, fromlist=["run"])
             mod.run()
@@ -36,6 +55,17 @@ def main() -> None:
             failed.append(name)
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc()
+            # never leave a stale passing JSON behind a failed bench
+            with open(path, "w") as f:
+                json.dump(
+                    {"error": f"{type(e).__name__}: {e}", "rows": common.drain_rows()},
+                    f, indent=1,
+                )
+            continue
+        rows = common.drain_rows()
+        with open(path, "w") as f:
+            json.dump({"rows": rows}, f, indent=1)
+        print(f"# wrote {path} ({len(rows)} rows)", flush=True)
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

@@ -59,8 +59,9 @@ def main():
 
     # distributed gram on this host's device pool (1 device here; run with
     # XLA_FLAGS=--xla_force_host_platform_device_count=8 for real sharding)
-    mesh = jax.make_mesh((len(jax.devices()),), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((len(jax.devices()),), ("model",))
     a = jnp.asarray(np.random.default_rng(1).standard_normal((1024, 512)), jnp.float32)
     c = ata_tile_parallel(a, mesh, task_axis="model", n_base=128)
     print(f"distributed gram (P={len(jax.devices())}): rel err = "

@@ -39,7 +39,55 @@ HBM_BW = 819e9           # bytes/s / chip
 LINK_BW = 50e9           # bytes/s / ICI link
 CHIPS = {"single": 256, "multi": 512}
 
-__all__ = ["compose_cell", "load_cells", "render_markdown", "PEAK_FLOPS", "HBM_BW", "LINK_BW"]
+__all__ = [
+    "compose_cell",
+    "load_cells",
+    "render_markdown",
+    "syrk_write_traffic",
+    "syrk_write_seconds",
+    "PEAK_FLOPS",
+    "HBM_BW",
+    "LINK_BW",
+]
+
+
+# ---------------------------------------------------------------------------
+# symmetric-output write-traffic model (packed-storage PR)
+# ---------------------------------------------------------------------------
+
+
+def syrk_write_traffic(n: int, bn: int, mode: str, itemsize: int = 4) -> int:
+    """HBM bytes *written* to produce an ``n × n`` symmetric product.
+
+    ``nb = ⌈n/bn⌉`` output tiles per side; ``T = nb(nb+1)/2`` lower tiles.
+
+      * ``'packed'``  — kernel stores only the T packed tiles:   ``T·bn²``.
+      * ``'dual'``    — in-kernel dual-write dense output, every
+        block stored exactly once:                               ``nb²·bn²``.
+        (The diagonal tile's symmetrized re-store targets the same output
+        block index, so it stays in VMEM and reaches HBM once.)
+      * ``'mirror'``  — the seed pipeline: kernel stores T tiles into an
+        nb²-tile buffer, then a tril+mirror post-pass re-writes the whole
+        square:                                             ``T·bn² + n²``.
+
+    The packed/dual ratio ``(nb+1)/2nb → 1/2`` is the storage half of the
+    paper's symmetry claim; 'mirror' shows what discarding it costs.
+    """
+    nb = -(-n // bn)
+    t = nb * (nb + 1) // 2
+    tile = bn * bn * itemsize
+    if mode == "packed":
+        return t * tile
+    if mode == "dual":
+        return nb * nb * tile
+    if mode == "mirror":
+        return t * tile + n * n * itemsize
+    raise ValueError(f"unknown syrk output mode {mode!r}")
+
+
+def syrk_write_seconds(n: int, bn: int, mode: str, itemsize: int = 4) -> float:
+    """Write-traffic seconds on the HBM roofline (v5e model)."""
+    return syrk_write_traffic(n, bn, mode, itemsize) / HBM_BW
 
 
 def _cost_vec(artifact: dict) -> dict:

@@ -1,0 +1,52 @@
+"""JAX version-compatibility shims.
+
+The repo targets the jax>=0.5 public APIs (``jax.shard_map``,
+``jax.sharding.AxisType``, ``pltpu.CompilerParams``); this module maps them
+onto their older homes so the library also runs on jax 0.4.3x (the container
+baseline). Keep every version branch in this one file.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "AxisType", "make_mesh", "tpu_compiler_params"]
+
+try:  # jax>=0.5
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (jax>=0.5) / ``TPUCompilerParams`` (older)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+    """``jax.shard_map`` with the old experimental fallback.
+
+    ``check_vma`` (new name) maps to ``check_rep`` (old name); ``None`` means
+    the backend default.
+    """
+    if hasattr(jax, "shard_map"):
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

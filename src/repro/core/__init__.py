@@ -1,15 +1,28 @@
 """Core library: the paper's contribution as composable JAX modules.
 
 Public API:
-  * :func:`repro.core.ata` — Strassen-based ``alpha·AᵀA`` (paper Algorithm 1).
+  * :func:`repro.core.ata` — Strassen-based ``alpha·AᵀA`` (paper Algorithm 1),
+    dense or packed-symmetric output.
+  * :func:`repro.core.ata_batched` — the same recursion with a leading batch
+    dim (one trace / one kernel launch per base tile; Shampoo's gram path).
+  * :class:`repro.core.SymmetricMatrix` — packed lower-triangular block
+    storage for symmetric results (``repro.core.symmetric``).
   * :func:`repro.core.strassen_tn` — rectangular TN Strassen (FastStrassen).
   * :mod:`repro.core.reference` — naive oracles + exact flop counters.
   * :mod:`repro.core.task_tree` — ATA-S/ATA-D task scheduler (paper §4.1).
   * :mod:`repro.core.distributed` — shard_map gram schedules (paper §4.2/4.3).
 """
 
-from repro.core.ata import ata
+from repro.core.ata import ata, ata_batched
 from repro.core.strassen import DEFAULT_N_BASE, strassen_tn
+from repro.core.symmetric import SymmetricMatrix
 from repro.core import reference
 
-__all__ = ["ata", "strassen_tn", "reference", "DEFAULT_N_BASE"]
+__all__ = [
+    "ata",
+    "ata_batched",
+    "strassen_tn",
+    "SymmetricMatrix",
+    "reference",
+    "DEFAULT_N_BASE",
+]

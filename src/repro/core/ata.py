@@ -17,28 +17,40 @@ TPU adaptation notes (see DESIGN.md §2):
   survives as nested recursive blocking that XLA/Mosaic tiles onto
   HBM→VMEM→VREG;
 * the symmetric saving at the *base-case* level lives in the Pallas ``syrk``
-  kernel, which computes only lower-triangular output blocks and mirrors;
-* ``C12 = C21ᵀ`` is materialized once per level by ``jnp.block`` — the flop
-  saving is kept, and the transpose is a copy XLA folds into the layout of the
-  consuming op (the paper likewise materializes the full square C at the
-  root).
+  kernel, which computes only lower-triangular output blocks;
+* **the symmetric saving at the storage level lives here**: the recursion is
+  organized as a *slab sum* — each node computes ``Σ_k A_kᵀA_k`` over a list
+  of row-slabs for one contiguous column range — and returns a
+  ``(c11, c21, c22)`` triangular node structure instead of a dense square.
+  No ``jnp.block`` and no ``C21ᵀ`` is materialized at any intermediate level;
+  the lower triangle is assembled exactly once at the root (each block
+  written once via static-offset updates), and the mirror to a full square
+  happens once for dense output — or never, when the caller asks for packed
+  output via ``ata(a, out="packed")``, which returns a
+  :class:`repro.core.symmetric.SymmetricMatrix`.
 
-``ata`` is a pure JAX function: it composes with ``jit``, ``vmap`` (used by
-the blocked-Shampoo optimizer over parameter blocks), ``grad``, and
-``shard_map`` (used by ``repro.core.distributed``).
+``ata`` is a pure JAX function: it composes with ``jit``, ``vmap``, ``grad``,
+and ``shard_map`` (used by ``repro.core.distributed``). ``ata_batched`` runs
+the same recursion with an explicit leading batch dimension — one trace, one
+kernel launch per base tile over the whole batch — which is what the
+blocked-Shampoo optimizer uses for its per-block gram statistics.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from typing import Callable, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.strassen import DEFAULT_N_BASE, _dot_tn, _rec_strassen, _rec_winograd
+from repro.core.symmetric import SymmetricMatrix, default_block_size, sym_tile
 
-__all__ = ["ata", "DEFAULT_N_BASE"]
+__all__ = ["ata", "ata_batched", "DEFAULT_N_BASE", "DEFAULT_PACKED_BLOCK"]
+
+# Default block size of the packed (SymmetricMatrix) output grid.
+DEFAULT_PACKED_BLOCK = 128
 
 
 def _syrk_base(a, acc_dtype):
@@ -46,27 +58,56 @@ def _syrk_base(a, acc_dtype):
 
     The Pallas kernel (``repro.kernels.ops.syrk``) replaces this on TPU and
     computes only the lower-triangular blocks; at the pure-jnp level the MXU
-    executes the full tile matmul, and we mirror ``low(C)`` so the public
-    invariant *C is exactly symmetric* holds bitwise (XLA's accumulation
-    order can differ per output position, so the raw matmul is only
-    approximately symmetric).
+    executes the full tile matmul, and we mirror ``low(C)`` so the tile-level
+    invariant *the base tile is exactly symmetric* holds bitwise (XLA's
+    accumulation order can differ per output position, so the raw matmul is
+    only approximately symmetric). This transpose is a ≤ n_base tile op — the
+    full-square mirror of the seed implementation is gone.
     """
-    c = _dot_tn(a, a, acc_dtype)
-    low = jnp.tril(c)
-    return low + jnp.tril(c, -1).T
+    return sym_tile(_dot_tn(a, a, acc_dtype))
 
 
-def _rec_ata(a, n_base, base_syrk, strassen_rec, base_dot, acc_dtype):
-    m, n = a.shape
-    if min(m, n) <= n_base:
-        return base_syrk(a)
+class _TriNode(NamedTuple):
+    """One recursion level of the symmetric product: C = [[c11, ·], [c21, c22]].
 
-    # floor/ceil split, paper Eq. (1): m1 = ⌊m/2⌋, n1 = ⌊n/2⌋.
-    m1, n1 = m // 2, n // 2
-    a11 = a[:m1, :n1]
-    a12 = a[:m1, n1:]
-    a21 = a[m1:, :n1]
-    a22 = a[m1:, n1:]
+    ``c11``/``c22`` are ``_TriNode`` or dense symmetric base tiles; ``c21`` is
+    the dense rectangular off-diagonal block. The never-computed upper block
+    has no representation — that is the point.
+    """
+
+    c11: object
+    c21: jax.Array
+    c22: object
+
+
+def _rec_ata(slabs, n_base, base_syrk, strassen_rec, base_dot, acc_dtype):
+    """Compute ``Σ_k slab_kᵀ·slab_k`` for one column range, as a _TriNode tree.
+
+    ``slabs`` is a list of ``(..., m_k, n)`` row-slabs sharing the column
+    range (the paper's ``C11 = A11ᵀA11 + A21ᵀA21`` generalized: every level
+    of row-halving doubles the slab list instead of materializing partial
+    dense sums). Keeping the sum *inside* the recursion means both addends of
+    every accumulation share one node structure by construction — the result
+    tree is a function of the column range only.
+    """
+    n = slabs[0].shape[-1]
+    m_max = max(s.shape[-2] for s in slabs)
+    if n <= n_base or m_max <= n_base:
+        out = base_syrk(slabs[0])
+        for s in slabs[1:]:
+            out = out + base_syrk(s)
+        return out
+
+    # floor/ceil split, paper Eq. (1): rows of every slab, then columns.
+    halves = []
+    for s in slabs:
+        m1 = s.shape[-2] // 2
+        if m1:
+            halves.append(s[..., :m1, :])
+        halves.append(s[..., m1:, :])
+    n1 = n // 2
+    left = [h[..., :n1] for h in halves]
+    right = [h[..., n1:] for h in halves]
 
     rec = functools.partial(
         _rec_ata,
@@ -80,65 +121,249 @@ def _rec_ata(a, n_base, base_syrk, strassen_rec, base_dot, acc_dtype):
         strassen_rec, n_base=n_base, base_dot=base_dot, acc_dtype=acc_dtype
     )
 
-    c11 = rec(a11) + rec(a21)          # (n1, n1)
-    c22 = rec(a12) + rec(a22)          # (n2, n2)
-    c21 = st(a12, a11) + st(a22, a21)  # (n2, n1)
+    c11 = rec(left)
+    c22 = rec(right)
+    c21 = st(right[0], left[0])
+    for r, l in zip(right[1:], left[1:]):
+        c21 = c21 + st(r, l)
+    return _TriNode(c11, c21, c22)
 
-    return jnp.block([[c11, c21.T], [c21, c22]])
+
+def _first_leaf(node):
+    while isinstance(node, _TriNode):
+        node = node.c11
+    return node
 
 
-def ata(
-    a: jax.Array,
-    *,
-    alpha: float = 1.0,
-    c: Optional[jax.Array] = None,
-    beta: float = 1.0,
-    n_base: int = DEFAULT_N_BASE,
-    variant: str = "strassen",
-    base_syrk: Optional[Callable] = None,
-    base_dot: Optional[Callable] = None,
-    acc_dtype=jnp.float32,
-) -> jax.Array:
-    """``C = alpha·AᵀA (+ beta·C)`` via the paper's ATA algorithm.
+def _assemble_lower(node, buf, off):
+    """Write the lower-triangular content of ``node`` into ``buf`` at diagonal
+    offset ``off``. Each block is written exactly once (static-offset
+    ``dynamic_update_slice``); no concatenation, no transposes."""
+    if not isinstance(node, _TriNode):
+        k = node.shape[-1]
+        return buf.at[..., off : off + k, off : off + k].set(node)
+    n1 = node.c21.shape[-1]
+    m2 = node.c21.shape[-2]
+    buf = _assemble_lower(node.c11, buf, off)
+    buf = buf.at[..., off + n1 : off + n1 + m2, off : off + n1].set(node.c21)
+    return _assemble_lower(node.c22, buf, off + n1)
 
-    Args:
-      a: ``(m, n)`` input, any rectangular shape (odd sizes handled by the
-        floor/ceil split here and virtual padding inside Strassen).
-      alpha, c, beta: BLAS-style scaling/accumulation.
-      n_base: recursion cutoff; tiles with any dim ≤ n_base go to the base
-        syrk/gemm. The TPU analogue of the paper's "fits in cache".
-      variant: Strassen variant for the C21 off-diagonal products —
-        ``'strassen'`` (paper-faithful) or ``'winograd'`` (beyond-paper,
-        15 adds).
-      base_syrk: base-case ``f(a) -> aᵀa`` (full symmetric tile). Defaults to
-        a TN dot_general; pass ``repro.kernels.ops.syrk`` for the Pallas
-        kernel.
-      base_dot: base-case ``f(a, b) -> aᵀb`` for the Strassen leaves.
-      acc_dtype: accumulation dtype.
 
-    Returns:
-      ``(n, n)`` full symmetric product.
+def _lower_dense(node, n):
+    """Assemble the root lower triangle (strictly-upper block region zero,
+    diagonal base tiles full-symmetric)."""
+    leaf = _first_leaf(node)
+    batch = leaf.shape[:-2]
+    buf = jnp.zeros((*batch, n, n), leaf.dtype)
+    return _assemble_lower(node, buf, 0)
+
+
+def _finalize_dense(node, n):
+    if not isinstance(node, _TriNode):
+        return node  # single base tile: already full and bitwise symmetric
+    # the one and only full-square mirror — at the root, for dense consumers.
+    return sym_tile(_lower_dense(node, n))
+
+
+def _write_packed_region(buf, arr, r0, c0, bn):
+    """Scatter a dense region at global offset ``(r0, c0)`` into packed
+    ``(..., T, bn, bn)`` block storage, splitting it along the bn grid.
+
+    Pieces falling in strictly-upper blocks (bi < bj) are skipped — they can
+    only come from the intra-tile upper halves of (symmetric) diagonal base
+    tiles that straddle a block boundary, whose content the mirror in
+    ``to_dense`` reconstructs. All offsets are static: each piece is one
+    static-slice ``dynamic_update_slice``.
     """
-    if a.ndim != 2:
-        raise ValueError(f"ata expects a 2-D operand, got shape {a.shape}")
+    h, w = arr.shape[-2:]
+    r = r0
+    while r < r0 + h:
+        bi = r // bn
+        r_end = min((bi + 1) * bn, r0 + h)
+        c = c0
+        while c < c0 + w:
+            bj = c // bn
+            c_end = min((bj + 1) * bn, c0 + w)
+            if bi >= bj:
+                t = bi * (bi + 1) // 2 + bj
+                buf = buf.at[
+                    ..., t, r - bi * bn : r_end - bi * bn, c - bj * bn : c_end - bj * bn
+                ].set(arr[..., r - r0 : r_end - r0, c - c0 : c_end - c0])
+            c = c_end
+        r = r_end
+    return buf
+
+
+def _assemble_packed(node, buf, off, bn):
+    if not isinstance(node, _TriNode):
+        return _write_packed_region(buf, node, off, off, bn)
+    n1 = node.c21.shape[-1]
+    buf = _assemble_packed(node.c11, buf, off, bn)
+    buf = _write_packed_region(buf, node.c21, off + n1, off, bn)
+    return _assemble_packed(node.c22, buf, off + n1, bn)
+
+
+def _finalize_packed(node, n, packed_block):
+    """Pack the node tree directly — the dense square is never materialized
+    (each result block is written once, straight into packed storage)."""
+    bn = default_block_size(n, packed_block)
+    nb = -(-n // bn)
+    leaf = _first_leaf(node)
+    batch = leaf.shape[:-2]
+    buf = jnp.zeros((*batch, nb * (nb + 1) // 2, bn, bn), leaf.dtype)
+    return SymmetricMatrix(_assemble_packed(node, buf, 0, bn), n, bn)
+
+
+def _ata_impl(
+    a,
+    *,
+    alpha,
+    c,
+    beta,
+    n_base,
+    variant,
+    base_syrk,
+    base_dot,
+    acc_dtype,
+    out,
+    packed_block,
+):
     if variant not in ("strassen", "winograd"):
         raise ValueError(f"unknown variant {variant!r}")
+    if out not in ("dense", "packed"):
+        raise ValueError(f"unknown output mode {out!r}; use 'dense' or 'packed'")
     if base_syrk is None:
         base_syrk = functools.partial(_syrk_base, acc_dtype=acc_dtype)
     if base_dot is None:
         base_dot = functools.partial(_dot_tn, acc_dtype=acc_dtype)
 
+    n = a.shape[-1]
     strassen_rec = _rec_strassen if variant == "strassen" else _rec_winograd
-    out = _rec_ata(
-        a,
+    node = _rec_ata(
+        [a],
         n_base=n_base,
         base_syrk=base_syrk,
         strassen_rec=strassen_rec,
         base_dot=base_dot,
         acc_dtype=acc_dtype,
     )
+
+    if out == "packed":
+        result = _finalize_packed(node, n, packed_block)
+        if alpha != 1.0:
+            result = result.scale(alpha)
+        if c is not None:
+            if not isinstance(c, SymmetricMatrix):
+                raise TypeError(
+                    "ata(..., out='packed') accumulates only into a "
+                    f"SymmetricMatrix c, got {type(c).__name__}"
+                )
+            result = result.add(c.scale(beta) if beta != 1.0 else c)
+        return result
+
+    result = _finalize_dense(node, n)
     if alpha != 1.0:
-        out = alpha * out
+        result = alpha * result
     if c is not None:
-        out = out + (beta * c if beta != 1.0 else c)
-    return out
+        if isinstance(c, SymmetricMatrix):
+            c = c.to_dense()
+        result = result + (beta * c if beta != 1.0 else c)
+    return result
+
+
+def ata(
+    a: jax.Array,
+    *,
+    alpha: float = 1.0,
+    c: Optional[Union[jax.Array, SymmetricMatrix]] = None,
+    beta: float = 1.0,
+    n_base: int = DEFAULT_N_BASE,
+    variant: str = "strassen",
+    base_syrk: Optional[Callable] = None,
+    base_dot: Optional[Callable] = None,
+    acc_dtype=jnp.float32,
+    out: str = "dense",
+    packed_block: int = DEFAULT_PACKED_BLOCK,
+) -> Union[jax.Array, SymmetricMatrix]:
+    """``C = alpha·AᵀA (+ beta·C)`` via the paper's ATA algorithm.
+
+    Args:
+      a: ``(m, n)`` input, any rectangular shape (odd sizes handled by the
+        floor/ceil split here and virtual padding inside Strassen).
+      alpha, c, beta: BLAS-style scaling/accumulation. With ``out='packed'``,
+        ``c`` must itself be a ``SymmetricMatrix`` of matching layout.
+      n_base: recursion cutoff; tiles with any dim ≤ n_base go to the base
+        syrk/gemm. The TPU analogue of the paper's "fits in cache".
+      variant: Strassen variant for the C21 off-diagonal products —
+        ``'strassen'`` (paper-faithful) or ``'winograd'`` (beyond-paper,
+        15 adds).
+      base_syrk: base-case ``f(a) -> aᵀa`` (full, bitwise-symmetric tile).
+        Defaults to a TN dot_general; pass ``repro.kernels.ops.syrk`` for the
+        Pallas kernel.
+      base_dot: base-case ``f(a, b) -> aᵀb`` for the Strassen leaves.
+      acc_dtype: accumulation dtype.
+      out: ``'dense'`` → ``(n, n)`` full symmetric array (one mirror, at the
+        root). ``'packed'`` → :class:`SymmetricMatrix` holding only the
+        ``nb(nb+1)/2`` lower-triangular blocks — no mirror anywhere.
+      packed_block: block size of the packed output grid (clamped to the
+        matrix size; see ``symmetric.default_block_size``).
+
+    Returns:
+      ``(n, n)`` full symmetric product, or its packed form.
+    """
+    if a.ndim != 2:
+        raise ValueError(f"ata expects a 2-D operand, got shape {a.shape}")
+    return _ata_impl(
+        a,
+        alpha=alpha,
+        c=c,
+        beta=beta,
+        n_base=n_base,
+        variant=variant,
+        base_syrk=base_syrk,
+        base_dot=base_dot,
+        acc_dtype=acc_dtype,
+        out=out,
+        packed_block=packed_block,
+    )
+
+
+def ata_batched(
+    a: jax.Array,
+    *,
+    alpha: float = 1.0,
+    c: Optional[Union[jax.Array, SymmetricMatrix]] = None,
+    beta: float = 1.0,
+    n_base: int = DEFAULT_N_BASE,
+    variant: str = "strassen",
+    base_syrk: Optional[Callable] = None,
+    base_dot: Optional[Callable] = None,
+    acc_dtype=jnp.float32,
+    out: str = "dense",
+    packed_block: int = DEFAULT_PACKED_BLOCK,
+) -> Union[jax.Array, SymmetricMatrix]:
+    """Batched ``C_b = alpha·A_bᵀA_b`` for ``a: (B, m, n)`` — one trace.
+
+    Unlike ``vmap(ata)``, the batch dimension is threaded through the
+    recursion itself: every base case is a single *batched* syrk over all B
+    tiles (one kernel launch with a leading batch grid dimension when the
+    Pallas kernel is the base), and every Strassen leaf is a batched TN dot.
+    ``out='packed'`` returns a ``SymmetricMatrix`` whose blocks carry the
+    leading batch dim: ``(B, T, bn, bn)``. This is the gram-statistics
+    entry point for the blocked-Shampoo optimizer.
+    """
+    if a.ndim != 3:
+        raise ValueError(f"ata_batched expects a (B, m, n) operand, got {a.shape}")
+    return _ata_impl(
+        a,
+        alpha=alpha,
+        c=c,
+        beta=beta,
+        n_base=n_base,
+        variant=variant,
+        base_syrk=base_syrk,
+        base_dot=base_dot,
+        acc_dtype=acc_dtype,
+        out=out,
+        packed_block=packed_block,
+    )

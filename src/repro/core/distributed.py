@@ -43,8 +43,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.ata import ata
 from repro.core.strassen import DEFAULT_N_BASE, strassen_tn
 
@@ -194,7 +196,7 @@ def ata_tile_parallel(
         return tiles
 
     in_spec = P(row_axis, None) if row_axis else P(None, None)
-    tiles = jax.shard_map(
+    tiles = shard_map(
         local_fn, mesh=mesh, in_specs=(in_spec,), out_specs=P(task_axis, None, None)
     )(a)
     # tiles: global (p_task * t_per, w, w); place tile g (= t for g < T) at
@@ -250,7 +252,7 @@ def gemm_tn_colshard(
         return c_local
 
     row_spec = row_axis if row_axis else None
-    return jax.shard_map(
+    return shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(row_spec, None), P(row_spec, task_axis)),

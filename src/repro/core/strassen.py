@@ -49,39 +49,45 @@ DEFAULT_N_BASE = 512
 
 
 def _dot_tn(a, b, acc_dtype):
-    """Base-case ``AᵀB`` without materializing ``Aᵀ`` (TN dot_general)."""
+    """Base-case ``AᵀB`` without materializing ``Aᵀ`` (TN dot_general).
+
+    Operates on the last two dims; any leading dims are batch dims (used by
+    the batched gram path in ``repro.core.ata.ata_batched``).
+    """
+    nb = a.ndim - 2
+    batch = tuple(range(nb))
     return jax.lax.dot_general(
         a,
         b,
-        dimension_numbers=(((0,), (0,)), ((), ())),
+        dimension_numbers=(((nb,), (nb,)), (batch, batch)),
         preferred_element_type=acc_dtype,
     )
 
 
 def _pad_even(x):
-    """Zero-pad both dims of ``x`` up to even (virtual padding)."""
-    m, n = x.shape
+    """Zero-pad the last two dims of ``x`` up to even (virtual padding)."""
+    m, n = x.shape[-2:]
     pm, pn = m & 1, n & 1
     if pm or pn:
-        x = jnp.pad(x, ((0, pm), (0, pn)))
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, pm), (0, pn)])
     return x
 
 
 def _quadrants(x):
-    m, n = x.shape
+    m, n = x.shape[-2:]
     m2, n2 = m // 2, n // 2
     return (
-        x[:m2, :n2],
-        x[:m2, n2:],
-        x[m2:, :n2],
-        x[m2:, n2:],
+        x[..., :m2, :n2],
+        x[..., :m2, n2:],
+        x[..., m2:, :n2],
+        x[..., m2:, n2:],
     )
 
 
 def _rec_strassen(a, b, n_base, base_dot, acc_dtype):
     """Classical Strassen recursion on the TN product (7 mults, 18 adds)."""
-    m, n = a.shape
-    _, k = b.shape
+    m, n = a.shape[-2:]
+    k = b.shape[-1]
     if min(m, n, k) <= n_base:
         return base_dot(a, b)
 
@@ -108,13 +114,13 @@ def _rec_strassen(a, b, n_base, base_dot, acc_dtype):
     c22 = m1 - m2 + m3 + m6
 
     c = jnp.block([[c11, c12], [c21, c22]])
-    return c[:n, :k]
+    return c[..., :n, :k]
 
 
 def _rec_winograd(a, b, n_base, base_dot, acc_dtype):
     """Strassen-Winograd recursion (7 mults, 15 adds) — beyond-paper variant."""
-    m, n = a.shape
-    _, k = b.shape
+    m, n = a.shape[-2:]
+    k = b.shape[-1]
     if min(m, n, k) <= n_base:
         return base_dot(a, b)
 
@@ -155,7 +161,7 @@ def _rec_winograd(a, b, n_base, base_dot, acc_dtype):
     c22 = u3 + p5
 
     c = jnp.block([[c11, c12], [c21, c22]])
-    return c[:n, :k]
+    return c[..., :n, :k]
 
 
 def strassen_tn(
@@ -174,6 +180,8 @@ def strassen_tn(
 
     Args:
       a: ``(m, n)`` left operand (used transposed, never materialized as Aᵀ).
+        Leading batch dims are allowed if ``b`` carries matching ones (the
+        recursion and base dot then run batched — one trace, no vmap).
       b: ``(m, k)`` right operand.
       alpha, c, beta: optional scaling/accumulation, BLAS-style.
       n_base: recursion cutoff — any dim ≤ n_base goes to the base matmul.
@@ -187,12 +195,12 @@ def strassen_tn(
     Returns:
       ``(n, k)`` product in ``acc_dtype`` (or the base_dot's output dtype).
     """
-    if a.ndim != 2 or b.ndim != 2:
-        raise ValueError(f"strassen_tn expects 2-D operands, got {a.shape}, {b.shape}")
-    if a.shape[0] != b.shape[0]:
+    if a.ndim < 2 or b.ndim < 2 or a.ndim != b.ndim:
+        raise ValueError(f"strassen_tn expects 2-D+ operands, got {a.shape}, {b.shape}")
+    if a.shape[-2] != b.shape[-2] or a.shape[:-2] != b.shape[:-2]:
         raise ValueError(
-            f"contracting dims mismatch: A is {a.shape}, B is {b.shape} "
-            "(TN product contracts dim 0 of both)"
+            f"contracting/batch dims mismatch: A is {a.shape}, B is {b.shape} "
+            "(TN product contracts dim -2 of both; leading dims are batch)"
         )
     if variant not in ("strassen", "winograd"):
         raise ValueError(f"unknown variant {variant!r}")

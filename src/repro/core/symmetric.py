@@ -1,0 +1,258 @@
+"""Packed lower-triangular block storage for symmetric matrices.
+
+The paper's product ``C = AᵀA`` is symmetric, and the algorithm only ever
+*computes* ``low(C)`` — the ``nb(nb+1)/2`` lower-triangular blocks of the
+``nb × nb`` block grid. The seed implementation discarded that saving at the
+storage level by mirroring into a full square at every consumer boundary.
+:class:`SymmetricMatrix` keeps the packed form end-to-end:
+
+    blocks : (..., T, bn, bn)   with T = nb·(nb+1)/2, nb = ⌈n/bn⌉
+
+where block ``t`` is the ``(i, j)`` tile of the block grid under the
+row-major lower-triangular enumeration ``t = i(i+1)/2 + j`` (j ≤ i) — the
+same enumeration the Pallas ``syrk`` kernel grid uses, so kernel output in
+packed mode *is* this storage with zero reshuffling.
+
+Contract per block:
+
+  * off-diagonal blocks (i > j) hold the full ``bn × bn`` tile of ``C``;
+  * diagonal blocks (i == j) hold a full tile that is **bitwise symmetric**
+    (producers symmetrize the diagonal tile once, at tile granularity —
+    an O(n·bn) cost, not the O(n²) full-matrix mirror this class exists to
+    eliminate).
+
+``to_dense`` therefore reconstructs the exact dense matrix with a single
+mirror at the conversion boundary; arithmetic (``add``/``scale``) and the
+decayed accumulations in the Shampoo optimizer stay packed, halving the
+resident memory of symmetric state (ratio ``(k+1)/2k`` for ``k = n/bn``
+blocks per side).
+
+Registered as a JAX pytree: composes with ``jit``, ``vmap`` (leading batch
+dims on ``blocks``), ``lax.cond`` carries, and optimizer state trees.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SymmetricMatrix", "tri_block_indices", "default_block_size", "sym_tile"]
+
+
+def sym_tile(x):
+    """Bitwise-symmetrize the trailing two dims: keep ``low(x)``, mirror up.
+
+    This single expression *is* the cross-producer diagonal-tile contract —
+    the jnp base case, the Pallas kernel, and ``to_dense`` all symmetrize
+    through it so diagonal tiles from any producer agree bitwise.
+    """
+    return jnp.tril(x) + jnp.swapaxes(jnp.tril(x, -1), -1, -2)
+
+
+def default_block_size(n: int, bn: int) -> int:
+    """Clamp a requested packed block size to the logical matrix size.
+
+    Two adjustments to the request: (1) the block never exceeds the next
+    multiple of 8 ≥ n, so a tiny matrix is not padded up to one huge block;
+    (2) the size is *balanced* over the implied block count
+    (``ceil8(⌈n/nb⌉)`` for ``nb = ⌈n/bn⌉``), so e.g. n=200 with a 128
+    request stores 2 balanced 104-blocks per side instead of padding the
+    matrix out to 256. Every producer of packed storage must use this same
+    clamp so that packed operands with equal ``(n, bn)`` requests are
+    structurally identical and can be added without re-blocking.
+    """
+    bn = min(bn, max(8, -(-n // 8) * 8))
+    nb = -(-n // bn)
+    return max(8, -(-(-(-n // nb)) // 8) * 8)
+
+
+def tri_block_indices(nb: int):
+    """``tril_indices``-style enumeration of the packed block grid.
+
+    Returns int32 arrays ``(i, j)`` of length ``T = nb(nb+1)/2`` with
+    ``t = i(i+1)/2 + j`` and ``j ≤ i`` — row-major over the lower triangle,
+    matching both ``np.tril_indices`` and the syrk kernel's ``_tri_coords``
+    inverse.
+    """
+    i, j = np.tril_indices(nb)
+    return i.astype(np.int32), j.astype(np.int32)
+
+
+@jax.tree_util.register_pytree_node_class
+class SymmetricMatrix:
+    """Symmetric ``n × n`` matrix stored as packed lower-triangular blocks."""
+
+    __slots__ = ("blocks", "n", "bn")
+
+    def __init__(self, blocks, n: int, bn: int):
+        # NOTE: deliberately no shape validation — tree transforms (vmap,
+        # eval_shape, tree_map with sentinels) rebuild instances with
+        # placeholder leaves.
+        self.blocks = blocks
+        self.n = int(n)
+        self.bn = int(bn)
+
+    # -- static geometry ----------------------------------------------------
+
+    @property
+    def nb(self) -> int:
+        return -(-self.n // self.bn)
+
+    @property
+    def t_total(self) -> int:
+        return self.nb * (self.nb + 1) // 2
+
+    @property
+    def shape(self):
+        """Logical dense shape (leading batch dims + (n, n))."""
+        return tuple(self.blocks.shape[:-3]) + (self.n, self.n)
+
+    @property
+    def dtype(self):
+        return self.blocks.dtype
+
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes of the packed storage (the memory claim)."""
+        return int(self.blocks.size) * self.blocks.dtype.itemsize
+
+    @staticmethod
+    def dense_nbytes(n: int, batch=(), itemsize: int = 4) -> int:
+        """Bytes the equivalent dense storage would occupy (for reporting)."""
+        return int(math.prod(batch)) * n * n * itemsize
+
+    # -- pytree protocol ----------------------------------------------------
+
+    def tree_flatten(self):
+        return (self.blocks,), (self.n, self.bn)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def zeros(cls, n: int, bn: int, batch=(), dtype=jnp.float32):
+        bn = default_block_size(n, bn)
+        nb = -(-n // bn)
+        t = nb * (nb + 1) // 2
+        return cls(jnp.zeros((*batch, t, bn, bn), dtype), n, bn)
+
+    @classmethod
+    def from_dense_lower(cls, lower, bn: int):
+        """Pack a dense array whose meaningful content is the lower triangle.
+
+        ``lower`` is ``(..., n, n)`` where strictly-upper *block* positions
+        are ignored (typically zero) and diagonal tiles may carry their full
+        symmetric content. The pack is a pure gather — no transpose of the
+        square is ever taken.
+        """
+        *batch, n, n2 = lower.shape
+        if n != n2:
+            raise ValueError(f"expected square input, got {lower.shape}")
+        bn = default_block_size(n, bn)
+        nb = -(-n // bn)
+        pad = nb * bn - n
+        if pad:
+            cfg = [(0, 0)] * len(batch) + [(0, pad), (0, pad)]
+            lower = jnp.pad(lower, cfg)
+        i_idx, j_idx = tri_block_indices(nb)
+
+        def pack2d(x):
+            x4 = x.reshape(nb, bn, nb, bn)
+            # advanced indices on axes 0 and 2 (separated by a slice) put the
+            # broadcast dim first: (T, bn, bn) — a gather, not a transpose.
+            return x4[i_idx, :, j_idx, :]
+
+        fn = pack2d
+        for _ in batch:
+            fn = jax.vmap(fn)
+        return cls(fn(lower), n, bn)
+
+    @classmethod
+    def from_dense(cls, dense, bn: int):
+        """Pack a full symmetric dense matrix (upper triangle discarded)."""
+        return cls.from_dense_lower(jnp.tril(dense), bn)._symmetrize_diag()
+
+    def _symmetrize_diag(self):
+        """Restore the full-symmetric-diagonal-tile contract after a tril."""
+        nb, bn = self.nb, self.bn
+        diag_t = np.array([i * (i + 1) // 2 + i for i in range(nb)], np.int32)
+        diag = self.blocks[..., diag_t, :, :]
+        return SymmetricMatrix(
+            self.blocks.at[..., diag_t, :, :].set(sym_tile(diag)), self.n, self.bn
+        )
+
+    # -- conversions --------------------------------------------------------
+
+    def to_dense(self):
+        """Dense ``(..., n, n)`` reconstruction, bitwise symmetric.
+
+        The single mirror of the whole lower triangle happens *here*, at the
+        conversion boundary — never inside producers.
+        """
+        nb, bn, n = self.nb, self.bn, self.n
+        i_idx, j_idx = tri_block_indices(nb)
+
+        def unpack2d(blocks):
+            z = jnp.zeros((nb, bn, nb, bn), blocks.dtype)
+            z = z.at[i_idx, :, j_idx, :].set(blocks)
+            return sym_tile(z.reshape(nb * bn, nb * bn)[:n, :n])
+
+        fn = unpack2d
+        for _ in self.blocks.shape[:-3]:
+            fn = jax.vmap(fn)
+        return fn(self.blocks)
+
+    def diagonal(self):
+        """The main diagonal of the logical matrix, ``(..., n)``."""
+        nb, bn, n = self.nb, self.bn, self.n
+        diag_t = np.array([i * (i + 1) // 2 + i for i in range(nb)], np.int32)
+        tiles = self.blocks[..., diag_t, :, :]          # (..., nb, bn, bn)
+        d = jnp.diagonal(tiles, axis1=-2, axis2=-1)      # (..., nb, bn)
+        return d.reshape(*self.blocks.shape[:-3], nb * bn)[..., :n]
+
+    def trace(self):
+        return jnp.sum(self.diagonal(), axis=-1)
+
+    # -- arithmetic (packed-linear ops stay packed) -------------------------
+
+    def _check_compatible(self, other: "SymmetricMatrix"):
+        if (self.n, self.bn) != (other.n, other.bn):
+            raise ValueError(
+                f"incompatible packed layouts: (n={self.n}, bn={self.bn}) vs "
+                f"(n={other.n}, bn={other.bn})"
+            )
+
+    def add(self, other: "SymmetricMatrix") -> "SymmetricMatrix":
+        self._check_compatible(other)
+        return SymmetricMatrix(self.blocks + other.blocks, self.n, self.bn)
+
+    def scale(self, s) -> "SymmetricMatrix":
+        return SymmetricMatrix(self.blocks * s, self.n, self.bn)
+
+    def astype(self, dtype) -> "SymmetricMatrix":
+        return SymmetricMatrix(self.blocks.astype(dtype), self.n, self.bn)
+
+    def __add__(self, other):
+        if isinstance(other, SymmetricMatrix):
+            return self.add(other)
+        return NotImplemented
+
+    def __mul__(self, s):
+        if isinstance(s, SymmetricMatrix):
+            return NotImplemented
+        return self.scale(s)
+
+    __rmul__ = __mul__
+
+    def __repr__(self):
+        return (
+            f"SymmetricMatrix(n={self.n}, bn={self.bn}, "
+            f"blocks={getattr(self.blocks, 'shape', None)}, "
+            f"dtype={getattr(self.blocks, 'dtype', None)})"
+        )

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 __all__ = ["gemm_tn_pallas", "DEFAULT_BLOCKS"]
 
 # (bm, bn, bk): contraction block, output-row block, output-col block.
@@ -105,7 +107,7 @@ def gemm_tn_pallas(
         out_specs=pl.BlockSpec((bn, bk), lambda i, j, l: (i, j)),
         out_shape=jax.ShapeDtypeStruct((np_, kp), out_dtype),
         scratch_shapes=[pltpu.VMEM((bn, bk), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

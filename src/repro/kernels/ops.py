@@ -26,8 +26,22 @@ def interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def syrk(a, *, alpha: float = 1.0, blocks=None, interpret=None, out_dtype=jnp.float32):
-    """``alpha·AᵀA`` via the Pallas lower-triangular syrk kernel."""
+def syrk(
+    a,
+    *,
+    alpha: float = 1.0,
+    blocks=None,
+    interpret=None,
+    out_dtype=jnp.float32,
+    out: str = "dense",
+):
+    """``alpha·AᵀA`` via the Pallas lower-triangular syrk kernel.
+
+    Accepts ``(m, n)`` or batched ``(B, m, n)`` input (the batch runs as a
+    leading grid dimension — one launch). ``out='packed'`` returns the
+    mirror-free :class:`repro.core.symmetric.SymmetricMatrix` form;
+    ``out='dense'`` uses the in-kernel dual-write (no mirror post-pass).
+    """
     if interpret is None:
         interpret = interpret_default()
     return syrk_pallas(
@@ -36,6 +50,7 @@ def syrk(a, *, alpha: float = 1.0, blocks=None, interpret=None, out_dtype=jnp.fl
         blocks=tuple(blocks or SYRK_BLOCKS),
         interpret=interpret,
         out_dtype=out_dtype,
+        out=out,
     )
 
 

@@ -81,6 +81,8 @@ def _cost_stats(compiled):
     ca = compiled.cost_analysis()
     if ca is None:
         return {}
+    if isinstance(ca, (list, tuple)):  # jax<=0.4.x: one dict per device
+        ca = ca[0] if ca else {}
     return {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

@@ -8,8 +8,9 @@ initialization, and tests keep their single default device.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import make_mesh as _compat_make_mesh
 
 __all__ = ["make_production_mesh", "make_mesh", "SINGLE_POD", "MULTI_POD"]
 
@@ -18,10 +19,9 @@ MULTI_POD = (2, 16, 16)        # 2 pods = 512 chips
 
 
 def make_mesh(shape, axes) -> Mesh:
-    """jax.make_mesh with explicit Auto axis types (GSPMD propagation)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    """jax.make_mesh with explicit Auto axis types (GSPMD propagation)
+    where the installed jax supports them."""
+    return _compat_make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

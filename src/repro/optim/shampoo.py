@@ -10,8 +10,19 @@ paper's product:
 computed **every step for every 2-D parameter block** — at production scale
 these grams are a first-order cost, which is why the paper's 2/3-Strassen
 saving is a real training-throughput lever. We compute them with
-:func:`repro.core.ata` vmapped over the blocks of the standard blocked-
-Shampoo partitioning (pad → tile into ``block×block`` tiles).
+:func:`repro.core.ata_batched` over the blocks of the standard blocked-
+Shampoo partitioning (pad → tile into ``block×block`` tiles): the batch of
+parameter blocks is threaded through the recursion as a leading dimension,
+so every base case is **one** batched syrk/gemm over all blocks rather than
+a vmap of per-block launches.
+
+With ``packed_grams=True`` (default) the L/R statistics are held in
+**packed lower-triangular block form** (:class:`repro.core.SymmetricMatrix`)
+end-to-end: the gram products come out of ``ata_batched(..., out="packed")``
+mirror-free, the decayed accumulation runs on packed blocks, and the dense
+square is materialized only inside the (every ``update_every`` steps)
+inverse-root refresh. This roughly halves the resident memory of the L/R
+optimizer state (exact ratio ``(k+1)/2k`` for ``k`` packed blocks per side).
 
 Other pieces follow Anil et al.'s distributed Shampoo: coupled-Newton
 inverse p-th roots (p = 4 for 2-D blocks) refreshed every
@@ -29,7 +40,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.ata import ata
+from repro.core.ata import ata_batched
+from repro.core.symmetric import SymmetricMatrix
 from repro.optim.adamw import Optimizer
 
 __all__ = ["shampoo", "inverse_pth_root"]
@@ -150,10 +162,33 @@ def shampoo(
     n_base: int = 256,
     variant: str = "strassen",
     newton_iters: int = 25,
+    packed_grams: bool = True,
+    gram_block: int = 128,
 ) -> Optimizer:
-    """ATA-powered blocked Shampoo with Adam grafting."""
+    """ATA-powered blocked Shampoo with Adam grafting.
 
-    gram = functools.partial(ata, n_base=n_base, variant=variant)
+    ``packed_grams`` keeps the L/R gram statistics in packed symmetric form
+    (about half the memory; densified only inside the preconditioner
+    refresh). ``gram_block`` is the packed storage block size.
+    """
+
+    gram_b = functools.partial(ata_batched, n_base=n_base, variant=variant)
+
+    def _gram_stats(gb):
+        """L/R gram products for all blocks of one parameter — one trace,
+        one launch per base tile over the whole block batch (no vmap)."""
+        out = "packed" if packed_grams else "dense"
+        l_new = gram_b(jnp.swapaxes(gb, -1, -2), out=out, packed_block=gram_block)
+        r_new = gram_b(gb, out=out, packed_block=gram_block)
+        return l_new, r_new
+
+    def _zeros_stat(n, nb):
+        if packed_grams:
+            return SymmetricMatrix.zeros(n, gram_block, batch=(nb,))
+        return jnp.zeros((nb, n, n), jnp.float32)
+
+    def _dense(stat):
+        return stat.to_dense() if isinstance(stat, SymmetricMatrix) else stat
 
     def _paths(params):
         flat, treedef = jax.tree_util.tree_flatten_with_path(params)
@@ -170,8 +205,8 @@ def shampoo(
                 nb = pt.n1 * pt.n2
                 stats.append(
                     {
-                        "l": jnp.zeros((nb, pt.b1, pt.b1), jnp.float32),
-                        "r": jnp.zeros((nb, pt.b2, pt.b2), jnp.float32),
+                        "l": _zeros_stat(pt.b1, nb),
+                        "r": _zeros_stat(pt.b2, nb),
                         "pl": jnp.stack([jnp.eye(pt.b1, dtype=jnp.float32)] * nb),
                         "pr": jnp.stack([jnp.eye(pt.b2, dtype=jnp.float32)] * nb),
                         "mom": jnp.zeros_like(p, dtype=jnp.float32),
@@ -222,15 +257,20 @@ def shampoo(
             pt = _plan(p.shape, block)
             gb = _to_blocks(g, pt)                              # (nb, b1, b2)
 
-            # --- the paper's product: gram statistics via ATA ---
-            l_new = jax.vmap(lambda x: gram(x.T))(gb)           # G·Gᵀ
-            r_new = jax.vmap(gram)(gb)                          # GᵀG
+            # --- the paper's product: gram statistics via batched ATA ---
+            # (packed mode: mirror-free SymmetricMatrix accumulation)
+            l_new, r_new = _gram_stats(gb)
             l = stat_decay * s["l"] + (1 - stat_decay) * l_new
             r = stat_decay * s["r"] + (1 - stat_decay) * r_new
 
             def _refresh(l=l, r=r):
-                pl = jax.vmap(lambda x: inverse_pth_root(x, 4, newton_iters))(l)
-                pr = jax.vmap(lambda x: inverse_pth_root(x, 4, newton_iters))(r)
+                # densify only here — once per `update_every` steps
+                pl = jax.vmap(lambda x: inverse_pth_root(x, 4, newton_iters))(
+                    _dense(l)
+                )
+                pr = jax.vmap(lambda x: inverse_pth_root(x, 4, newton_iters))(
+                    _dense(r)
+                )
                 return pl, pr
 
             def _keep(l=l, r=r):

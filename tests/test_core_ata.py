@@ -4,7 +4,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # hypothesis is a dev-only dependency (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import ata, strassen_tn
 from repro.core.reference import (
@@ -147,6 +153,57 @@ def test_ata_grad():
     np.testing.assert_allclose(g, g_ref, rtol=1e-9, atol=1e-9)
 
 
+@pytest.mark.parametrize("m,n", [(64, 64), (67, 53), (200, 100), (257, 129)])
+def test_ata_packed_bitwise_matches_dense(m, n):
+    """ata(out='packed').to_dense() must equal dense ata *bitwise*."""
+    from repro.core import SymmetricMatrix
+
+    r = rng(hash((m, n, "packed")) % 2**32)
+    a = jnp.asarray(r.standard_normal((m, n)))
+    dense = ata(a, n_base=8, acc_dtype=jnp.float64)
+    packed = ata(a, n_base=8, acc_dtype=jnp.float64, out="packed", packed_block=32)
+    assert isinstance(packed, SymmetricMatrix)
+    np.testing.assert_array_equal(np.asarray(packed.to_dense()), np.asarray(dense))
+    # packed really is packed: T = nb(nb+1)/2 blocks, not nb²
+    assert packed.blocks.shape[-3] == packed.nb * (packed.nb + 1) // 2
+
+
+def test_ata_packed_no_intermediate_square_transposes():
+    """No full-square (2-D, > n_base) transpose anywhere in the packed path;
+    dense output takes exactly one — the root mirror."""
+    n_base = 64
+    a = jnp.zeros((256, 256), jnp.float32)
+
+    def transposes_2d(fn):
+        jaxpr = jax.make_jaxpr(fn)(a)
+        return [
+            eqn.outvars[0].aval.shape
+            for eqn in jaxpr.jaxpr.eqns
+            if eqn.primitive.name == "transpose"
+            and len(eqn.outvars[0].aval.shape) == 2
+        ]
+
+    packed = transposes_2d(lambda x: ata(x, n_base=n_base, out="packed"))
+    dense = transposes_2d(lambda x: ata(x, n_base=n_base))
+    # leaf-tile mirrors (≤ n_base per dim) are the base-case symmetry
+    # contract; anything larger would be a reintroduced square mirror.
+    assert all(max(s) <= n_base for s in packed), packed
+    big = [s for s in dense if max(s) > n_base]
+    assert big == [(256, 256)], big
+
+
+def test_ata_batched_matches_einsum():
+    from repro.core import ata_batched
+
+    r = rng(11)
+    a = jnp.asarray(r.standard_normal((5, 48, 28)))
+    got = ata_batched(a, n_base=8, acc_dtype=jnp.float64)
+    want = jnp.einsum("bmi,bmj->bij", a, a)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+    packed = ata_batched(a, n_base=8, acc_dtype=jnp.float64, out="packed", packed_block=16)
+    np.testing.assert_array_equal(np.asarray(packed.to_dense()), np.asarray(got))
+
+
 def test_ata_f32_tolerance_moderate_depth():
     """Production dtype path: f32 with a few recursion levels stays tight."""
     r = rng(7)
@@ -162,56 +219,62 @@ def test_ata_f32_tolerance_moderate_depth():
 
 # ---------------------------------------------------------------------------
 # property tests (hypothesis) — arbitrary rectangular shapes
+# (skipped when hypothesis is not installed; see requirements-dev.txt)
 # ---------------------------------------------------------------------------
 
+if HAVE_HYPOTHESIS:
 
-@settings(max_examples=40, deadline=None)
-@given(
-    m=st.integers(min_value=1, max_value=80),
-    n=st.integers(min_value=1, max_value=80),
-    n_base=st.sampled_from([1, 2, 4, 8]),
-    variant=st.sampled_from(["strassen", "winograd"]),
-    seed=st.integers(min_value=0, max_value=2**31 - 1),
-)
-def test_property_ata_any_shape(m, n, n_base, variant, seed):
-    r = rng(seed)
-    a = jnp.asarray(r.standard_normal((m, n)))
-    got = ata(a, n_base=n_base, variant=variant, acc_dtype=jnp.float64)
-    np.testing.assert_allclose(got, a.T @ a, rtol=1e-8, atol=1e-8)
-    # invariant: exact symmetry by construction
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(got).T)
+    @settings(max_examples=40, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=80),
+        n=st.integers(min_value=1, max_value=80),
+        n_base=st.sampled_from([1, 2, 4, 8]),
+        variant=st.sampled_from(["strassen", "winograd"]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_property_ata_any_shape(m, n, n_base, variant, seed):
+        r = rng(seed)
+        a = jnp.asarray(r.standard_normal((m, n)))
+        got = ata(a, n_base=n_base, variant=variant, acc_dtype=jnp.float64)
+        np.testing.assert_allclose(got, a.T @ a, rtol=1e-8, atol=1e-8)
+        # invariant: exact symmetry by construction
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(got).T)
 
+    @settings(max_examples=40, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=64),
+        n=st.integers(min_value=1, max_value=64),
+        k=st.integers(min_value=1, max_value=64),
+        n_base=st.sampled_from([1, 2, 4, 8]),
+        variant=st.sampled_from(["strassen", "winograd"]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_property_strassen_any_shape(m, n, k, n_base, variant, seed):
+        r = rng(seed)
+        a = jnp.asarray(r.standard_normal((m, n)))
+        b = jnp.asarray(r.standard_normal((m, k)))
+        got = strassen_tn(a, b, n_base=n_base, variant=variant, acc_dtype=jnp.float64)
+        np.testing.assert_allclose(got, a.T @ b, rtol=1e-8, atol=1e-8)
 
-@settings(max_examples=40, deadline=None)
-@given(
-    m=st.integers(min_value=1, max_value=64),
-    n=st.integers(min_value=1, max_value=64),
-    k=st.integers(min_value=1, max_value=64),
-    n_base=st.sampled_from([1, 2, 4, 8]),
-    variant=st.sampled_from(["strassen", "winograd"]),
-    seed=st.integers(min_value=0, max_value=2**31 - 1),
-)
-def test_property_strassen_any_shape(m, n, k, n_base, variant, seed):
-    r = rng(seed)
-    a = jnp.asarray(r.standard_normal((m, n)))
-    b = jnp.asarray(r.standard_normal((m, k)))
-    got = strassen_tn(a, b, n_base=n_base, variant=variant, acc_dtype=jnp.float64)
-    np.testing.assert_allclose(got, a.T @ b, rtol=1e-8, atol=1e-8)
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=48),
+        n=st.integers(min_value=1, max_value=48),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_property_ata_psd(m, n, seed):
+        """AᵀA is positive semi-definite — eigvals of ATA's result are ≥ -eps."""
+        r = rng(seed)
+        a = jnp.asarray(r.standard_normal((m, n)))
+        c = np.asarray(ata(a, n_base=4, acc_dtype=jnp.float64))
+        w = np.linalg.eigvalsh(c)
+        assert w.min() >= -1e-8 * max(1.0, abs(w).max())
 
+else:
 
-@settings(max_examples=20, deadline=None)
-@given(
-    m=st.integers(min_value=1, max_value=48),
-    n=st.integers(min_value=1, max_value=48),
-    seed=st.integers(min_value=0, max_value=2**31 - 1),
-)
-def test_property_ata_psd(m, n, seed):
-    """AᵀA is positive semi-definite — eigvals of the ATA result are ≥ -eps."""
-    r = rng(seed)
-    a = jnp.asarray(r.standard_normal((m, n)))
-    c = np.asarray(ata(a, n_base=4, acc_dtype=jnp.float64))
-    w = np.linalg.eigvalsh(c)
-    assert w.min() >= -1e-8 * max(1.0, abs(w).max())
+    @pytest.mark.skip(reason="hypothesis not installed (pip install -r requirements-dev.txt)")
+    def test_property_suite_requires_hypothesis():
+        pass
 
 
 # ---------------------------------------------------------------------------

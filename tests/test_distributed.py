@@ -92,11 +92,12 @@ print("OK")
 ROWSHARD_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import shard_map
 from repro.core.distributed import gram_rowshard
 mesh = jax.make_mesh((8,), ("data",))
 r = np.random.default_rng(2)
 a = jnp.asarray(r.standard_normal((512, 96)), dtype=jnp.float32)
-f = jax.jit(jax.shard_map(
+f = jax.jit(shard_map(
     lambda x: gram_rowshard(x, "data", n_base=32),
     mesh=mesh, in_specs=(P("data", None),), out_specs=P(None, None)))
 c = f(a)
@@ -136,11 +137,11 @@ def test_multidevice(script):
 
 SP_DECODE_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
 from repro.configs.registry import get_smoke
 from repro.models import layers as L
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = get_smoke("command-r-plus-104b")  # GQA groups > 1
 p = L.init_attn(jax.random.key(0), cfg)
 rng = np.random.default_rng(0)
@@ -166,12 +167,12 @@ def test_seq_parallel_flash_decode():
 
 CP_ATTENTION_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
 from repro.configs.registry import get_smoke
 from repro.models import layers as L
 from repro.models.transformer import forward_train, init
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = get_smoke("hymba-1.5b")
 p = L.init_attn(jax.random.key(0), cfg)
 rng = np.random.default_rng(0)

@@ -122,3 +122,97 @@ def test_syrk_triangular_grid_only_lower_blocks():
         assert 0 <= j <= i < nb
         seen.add((i, j))
     assert len(seen) == nb * (nb + 1) // 2
+
+
+# ---------------------------------------------------------------------------
+# packed / dual-write / batched output modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,n", [(64, 256), (40, 100), (513, 257), (300, 700)])
+def test_syrk_packed_mode_matches_dense_bitwise(m, n):
+    """Packed output must reconstruct the dense dual-write output exactly,
+    while allocating only the nb(nb+1)/2 lower blocks."""
+    from repro.core import SymmetricMatrix
+
+    r = np.random.default_rng(hash((m, n, "p")) % 2**32)
+    a = jnp.asarray(r.standard_normal((m, n)), dtype=jnp.float32)
+    dense = syrk(a, blocks=(256, 128), interpret=True)
+    packed = syrk(a, blocks=(256, 128), interpret=True, out="packed")
+    assert isinstance(packed, SymmetricMatrix)
+    nb = packed.nb
+    assert packed.blocks.shape == (nb * (nb + 1) // 2, packed.bn, packed.bn)
+    np.testing.assert_array_equal(np.asarray(packed.to_dense()), np.asarray(dense))
+
+
+def test_syrk_dual_write_no_mirror_postpass():
+    """The dense mode's symmetry comes from the in-kernel dual write — the
+    wrapper must contain no full-square transpose/mirror post-pass. Only
+    tile-granular (≤ block) transposes inside the kernel body are allowed."""
+
+    def wrapper_transposes(jaxpr, acc):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "transpose":
+                acc.append(eqn.outvars[0].aval.shape)
+            # descend into jit wrappers but NOT into the kernel body itself
+            if eqn.primitive.name != "pallas_call":
+                for v in eqn.params.values():
+                    if hasattr(v, "jaxpr"):
+                        wrapper_transposes(v.jaxpr, acc)
+        return acc
+
+    a = jnp.zeros((256, 256), jnp.float32)
+    jaxpr = jax.make_jaxpr(lambda x: syrk(x, blocks=(128, 128), interpret=True))(a)
+    found = wrapper_transposes(jaxpr.jaxpr, [])
+    assert found == [], f"wrapper reintroduced a mirror post-pass: {found}"
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_syrk_batched_one_launch(dtype):
+    """(B, m, n) input runs through a leading batch grid dimension."""
+    r = np.random.default_rng(9)
+    a = jnp.asarray(r.standard_normal((3, 70, 200)), dtype=dtype)
+    got = syrk(a, blocks=(64, 128), interpret=True)
+    want = jnp.einsum(
+        "bmi,bmj->bij", a.astype(jnp.float32), a.astype(jnp.float32)
+    )
+    assert got.shape == (3, 200, 200)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+    for b in range(3):
+        np.testing.assert_array_equal(np.asarray(got[b]), np.asarray(got[b]).T)
+    packed = syrk(a, blocks=(64, 128), interpret=True, out="packed")
+    assert packed.blocks.shape[0] == 3
+    np.testing.assert_array_equal(np.asarray(packed.to_dense()), np.asarray(got))
+
+
+def test_syrk_packed_layout_compatible_with_other_producers():
+    """Packed kernel output must share the common block-size clamp so it can
+    be accumulated against ata-packed results and zeros() state (and a small
+    matrix is never padded up to a huge single block)."""
+    from repro.core import SymmetricMatrix, ata
+
+    r = np.random.default_rng(11)
+    a = jnp.asarray(r.standard_normal((32, 64)), jnp.float32)
+    p_syrk = syrk(a, interpret=True, out="packed")
+    assert p_syrk.bn == 64 and p_syrk.nbytes <= 64 * 64 * 4
+    p_ata = ata(a, n_base=256, out="packed", packed_block=128)
+    acc = SymmetricMatrix.zeros(64, 128) + p_syrk + p_ata.astype(jnp.float32)
+    np.testing.assert_allclose(
+        acc.to_dense(), 2.0 * (a.T @ a), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_ata_packed_with_pallas_packed_base():
+    """End-to-end packed path: recursion + packed-capable Pallas base."""
+    from repro.core import ata
+
+    r = np.random.default_rng(10)
+    a = jnp.asarray(r.standard_normal((256, 192)), dtype=jnp.float32)
+    got = ata(
+        a,
+        n_base=128,
+        out="packed",
+        base_syrk=lambda x: syrk(x, blocks=(128, 128), interpret=True),
+        base_dot=lambda x, y: gemm_tn(x, y, blocks=(128, 128, 128), interpret=True),
+    )
+    np.testing.assert_allclose(got.to_dense(), a.T @ a, rtol=2e-4, atol=2e-4)

@@ -88,17 +88,50 @@ def test_inverse_pth_root_p2():
     np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
 
 
-def test_shampoo_stats_are_ata_grams():
-    """The L/R statistics must equal decayed G·Gᵀ / GᵀG gram sums."""
-    opt = shampoo(constant(1e-2), block=16, update_every=1, stat_decay=0.5, n_base=4)
+@pytest.mark.parametrize("packed", [True, False], ids=["packed", "dense"])
+def test_shampoo_stats_are_ata_grams(packed):
+    """The L/R statistics must equal decayed G·Gᵀ / GᵀG gram sums —
+    in packed (SymmetricMatrix) form by default, dense on request."""
+    from repro.core import SymmetricMatrix
+
+    opt = shampoo(constant(1e-2), block=16, update_every=1, stat_decay=0.5,
+                  n_base=4, packed_grams=packed, gram_block=8)
     params = {"w": jnp.zeros((16, 16), jnp.float32)}
     g = jax.random.normal(jax.random.key(3), (16, 16), jnp.float32)
     state = opt.init(params)
     _, state = opt.update({"w": g}, state, params)
-    l = np.asarray(state["shampoo"]["w"]["l"][0])
-    r_stat = np.asarray(state["shampoo"]["w"]["r"][0])
+    l_stat = state["shampoo"]["w"]["l"]
+    r_stat = state["shampoo"]["w"]["r"]
+    if packed:
+        assert isinstance(l_stat, SymmetricMatrix)
+        # the memory claim: only T = k(k+1)/2 blocks are resident
+        nb = l_stat.nb
+        assert l_stat.blocks.shape[-3] == nb * (nb + 1) // 2
+        l_stat, r_stat = l_stat.to_dense(), r_stat.to_dense()
+    l = np.asarray(l_stat[0])
+    r_ = np.asarray(r_stat[0])
     np.testing.assert_allclose(l, 0.5 * np.asarray(g @ g.T), rtol=1e-4, atol=1e-4)
-    np.testing.assert_allclose(r_stat, 0.5 * np.asarray(g.T @ g), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(r_, 0.5 * np.asarray(g.T @ g), rtol=1e-4, atol=1e-4)
+
+
+def test_shampoo_packed_matches_dense_updates():
+    """packed_grams must not change the math: step results allclose, and the
+    resident gram-statistics memory must shrink."""
+    params = {"w": jax.random.normal(jax.random.key(7), (64, 32), jnp.float32)}
+    g = {"w": jax.random.normal(jax.random.key(8), (64, 32), jnp.float32)}
+    outs, stats_bytes = {}, {}
+    for packed in (True, False):
+        opt = shampoo(constant(1e-2), block=32, update_every=2, n_base=8,
+                      packed_grams=packed, gram_block=8)
+        state = opt.init(params)
+        u1, state = opt.update(g, state, params)
+        u2, state = opt.update(g, state, params)   # step 2 refreshes roots
+        outs[packed] = (u1["w"], u2["w"])
+        s = state["shampoo"]["w"]
+        stats_bytes[packed] = s["l"].nbytes + s["r"].nbytes
+    np.testing.assert_allclose(outs[True][0], outs[False][0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(outs[True][1], outs[False][1], rtol=1e-4, atol=1e-5)
+    assert stats_bytes[True] < stats_bytes[False]
 
 
 def test_shampoo_skips_embeddings():

@@ -1,0 +1,175 @@
+"""Tests for the packed-symmetric storage (`repro.core.symmetric`) and the
+packed-index math shared with the syrk kernel grid."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.symmetric import SymmetricMatrix, default_block_size, tri_block_indices
+from repro.kernels.syrk import _tri_coords
+
+
+# ---------------------------------------------------------------------------
+# _tri_coords: the packed-index → (i, j) inverse used by the kernel grid
+# ---------------------------------------------------------------------------
+
+
+def test_tri_coords_exhaustive_1e6():
+    """Exhaustive inverse check for every packed index t < 10⁶."""
+    t = jnp.arange(1_000_000, dtype=jnp.int32)
+    i, j = _tri_coords(t)
+    i, j = np.asarray(i), np.asarray(j)
+    # exact inverse of t = i(i+1)/2 + j
+    np.testing.assert_array_equal(i.astype(np.int64) * (i + 1) // 2 + j, np.asarray(t))
+    assert (j >= 0).all() and (j <= i).all()
+
+
+def test_tri_coords_fp_boundary_cases():
+    """Triangular numbers and their neighbours are exactly where the f32
+    sqrt can round the wrong way — the integer correction must absorb it."""
+    rows = np.unique(
+        np.concatenate(
+            [
+                np.arange(1, 2000, dtype=np.int64),
+                np.asarray([2047, 2048, 2896, 4095, 4096], dtype=np.int64),
+            ]
+        )
+    )
+    cases = []
+    for i in rows:
+        tri = i * (i + 1) // 2
+        cases += [tri - 1, tri, tri + 1]  # last of row i-1, first/second of row i
+    t = jnp.asarray(np.asarray(sorted(set(c for c in cases if c >= 0))), jnp.int32)
+    i, j = _tri_coords(t)
+    i, j = np.asarray(i, np.int64), np.asarray(j, np.int64)
+    np.testing.assert_array_equal(i * (i + 1) // 2 + j, np.asarray(t))
+    assert (j >= 0).all() and (j <= i).all()
+
+
+def test_tri_coords_matches_tril_indices_enumeration():
+    """Kernel grid order and SymmetricMatrix storage order must agree."""
+    nb = 53
+    i_ref, j_ref = tri_block_indices(nb)
+    t = jnp.arange(nb * (nb + 1) // 2, dtype=jnp.int32)
+    i, j = _tri_coords(t)
+    np.testing.assert_array_equal(np.asarray(i), i_ref)
+    np.testing.assert_array_equal(np.asarray(j), j_ref)
+
+
+# ---------------------------------------------------------------------------
+# SymmetricMatrix: packed <-> dense round trips and arithmetic
+# ---------------------------------------------------------------------------
+
+
+def _random_sym(r, n):
+    x = r.standard_normal((n, n)).astype(np.float32)
+    low = np.tril(x)
+    return jnp.asarray(low + np.tril(x, -1).T)
+
+
+@pytest.mark.parametrize("n,bn", [(8, 8), (64, 16), (100, 32), (129, 64), (7, 128)])
+def test_roundtrip_dense_packed_dense(n, bn):
+    r = np.random.default_rng(n * 1000 + bn)
+    dense = _random_sym(r, n)
+    sm = SymmetricMatrix.from_dense(dense, bn)
+    np.testing.assert_array_equal(np.asarray(sm.to_dense()), np.asarray(dense))
+    # packed block count is triangular, never nb²
+    assert sm.blocks.shape[-3] == sm.nb * (sm.nb + 1) // 2
+    assert sm.shape == (n, n)
+
+
+def test_block_size_clamp():
+    # a 7×7 matrix must not be blown up to a 128×128 block
+    assert default_block_size(7, 128) == 8
+    assert default_block_size(1000, 128) == 128
+    sm = SymmetricMatrix.zeros(7, 128)
+    assert sm.bn == 8 and sm.blocks.shape == (1, 8, 8)
+
+
+def test_packed_memory_ratio():
+    """Resident bytes approach half of dense as blocks-per-side grows."""
+    n, bn = 1024, 128
+    sm = SymmetricMatrix.zeros(n, bn)
+    dense_bytes = n * n * 4
+    ratio = sm.nbytes / dense_bytes
+    k = n // bn
+    assert ratio == pytest.approx((k + 1) / (2 * k))
+    assert ratio < 0.6
+
+
+def test_add_scale_stay_packed_and_match_dense():
+    r = np.random.default_rng(3)
+    a, b = _random_sym(r, 96), _random_sym(r, 96)
+    sa = SymmetricMatrix.from_dense(a, 32)
+    sb = SymmetricMatrix.from_dense(b, 32)
+    out = 0.25 * sa + sb.scale(2.0)
+    assert isinstance(out, SymmetricMatrix)
+    np.testing.assert_allclose(
+        np.asarray(out.to_dense()), 0.25 * np.asarray(a) + 2.0 * np.asarray(b),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_add_incompatible_layouts_raise():
+    a = SymmetricMatrix.zeros(64, 16)
+    b = SymmetricMatrix.zeros(64, 32)
+    with pytest.raises(ValueError):
+        a.add(b)
+
+
+def test_diagonal_and_trace():
+    r = np.random.default_rng(4)
+    dense = _random_sym(r, 70)
+    sm = SymmetricMatrix.from_dense(dense, 32)
+    np.testing.assert_allclose(np.asarray(sm.diagonal()), np.diag(np.asarray(dense)), rtol=1e-6)
+    np.testing.assert_allclose(float(sm.trace()), float(jnp.trace(dense)), rtol=1e-5)
+
+
+def test_pytree_jit_vmap_cond():
+    """SymmetricMatrix must ride through jit, vmap, and lax.cond as a pytree."""
+    r = np.random.default_rng(5)
+    batch = jnp.asarray(
+        np.stack([np.asarray(_random_sym(r, 40)) for _ in range(3)])
+    )
+    sm = jax.vmap(lambda d: SymmetricMatrix.from_dense(d, 16))(batch)
+    assert sm.blocks.shape[0] == 3
+
+    @jax.jit
+    def decayed(s):
+        return jax.lax.cond(True, lambda x: 0.5 * x, lambda x: x, s)
+
+    out = decayed(sm)
+    np.testing.assert_allclose(
+        np.asarray(out.to_dense()), 0.5 * np.asarray(batch), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_batched_roundtrip():
+    r = np.random.default_rng(6)
+    batch = np.stack([np.asarray(_random_sym(r, 33)) for _ in range(4)])
+    sm = SymmetricMatrix.from_dense(jnp.asarray(batch), 16)
+    assert sm.blocks.shape[:1] == (4,)
+    np.testing.assert_array_equal(np.asarray(sm.to_dense()), batch)
+
+
+# ---------------------------------------------------------------------------
+# write-traffic model (analysis satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_syrk_write_traffic_model():
+    from repro.analysis.roofline import syrk_write_traffic
+
+    n, bn = 1024, 128
+    nb = n // bn
+    t = nb * (nb + 1) // 2
+    packed = syrk_write_traffic(n, bn, "packed")
+    dual = syrk_write_traffic(n, bn, "dual")
+    mirror = syrk_write_traffic(n, bn, "mirror")
+    assert packed == t * bn * bn * 4
+    assert dual == nb * nb * bn * bn * 4
+    # the seed's mirror pass re-writes the full square on top of the kernel's
+    # triangular writes — strictly the worst of the three
+    assert mirror > dual > packed
+    assert packed / dual == pytest.approx((nb + 1) / (2 * nb))
