@@ -19,20 +19,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import effective_gflops, emit, time_fn, time_pair
+from benchmarks.common import effective_gflops, emit, smoke, time_fn, time_pair
+from repro import tune
 from repro.core import ata
 from repro.core.reference import ata_flops, classical_syrk_flops
-
-N_BASE = 256
 
 
 def run():
     rng = np.random.default_rng(0)
-    for m, n in [(512, 512), (1024, 1024), (2048, 2048), (4096, 1024), (2048, 512)]:
+    shapes = [(512, 512), (1024, 1024), (2048, 2048), (4096, 1024), (2048, 512)]
+    if smoke():
+        shapes = [(512, 512), (1024, 1024)]
+    for m, n in shapes:
         a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
 
-        f_ata = jax.jit(lambda a: ata(a, n_base=N_BASE))
-        f_packed = jax.jit(lambda a: ata(a, n_base=N_BASE, out="packed"))
+        # one planner decision per shape (analytic model / plan cache);
+        # the packed run shares the plan's recursion bitwise.
+        plan = tune.plan(op="ata", m=m, n=n)
+        f_ata = jax.jit(lambda a: ata(a, plan=plan))
+        f_packed = jax.jit(lambda a: ata(a, plan=plan, out="packed"))
         f_ref = jax.jit(
             lambda a: jax.lax.dot_general(
                 a, a, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
@@ -42,7 +47,7 @@ def run():
         # and this container's background load drifts on a seconds scale.
         t_ata, t_packed = time_pair(f_ata, f_packed, a)
         t_ref = time_fn(f_ref, a)
-        flop_ratio = ata_flops(m, n, N_BASE) / classical_syrk_flops(m, n)
+        flop_ratio = ata_flops(m, n, plan.n_base) / classical_syrk_flops(m, n)
         emit(
             f"fig3_ata_{m}x{n}",
             t_ata,
@@ -53,6 +58,8 @@ def run():
             gflops=effective_gflops(m, n, t_ata),
             mode="dense",
             ref_seconds=t_ref,
+            n_base=plan.n_base,
+            algorithm=plan.algorithm,
         )
         emit(
             f"fig3_ata_packed_{m}x{n}",

@@ -29,7 +29,7 @@ mesh = make_mesh((d, m), ("data", "model"))
 r = np.random.default_rng(0)
 a_host = r.standard_normal(({m_}, {n})).astype(np.float32)
 f = jax.jit(lambda a: ata_tile_parallel(a, mesh, task_axis="model",
-                                        row_axis="data", n_base=256))
+                                        row_axis="data"))
 sh = NamedSharding(mesh, P("data", None))
 # warm
 a = jax.device_put(jnp.asarray(a_host), sh); jax.block_until_ready(f(a))

@@ -6,6 +6,10 @@ dual-write, no mirror post-pass). Interpret-mode timings are NOT hardware
 numbers (the kernel body runs in Python); the derived column therefore
 reports the *structural* quantities the TPU run would inherit: grid sizes,
 flop fractions, and modeled HBM write bytes per output mode.
+
+Block shapes come from the planner (``tune.plan(...).syrk_blocks`` /
+``.gemm_blocks``); the kernels clamp them to this bench's deliberately
+small operands.
 """
 
 from __future__ import annotations
@@ -13,35 +17,39 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, smoke, time_fn
+from repro import tune
 from repro.analysis.roofline import syrk_write_traffic
 from repro.kernels import gemm_tn, syrk
-from repro.kernels.ref import gemm_tn_ref, syrk_ref
+from repro.kernels.ref import syrk_ref
 
 
 def run():
     rng = np.random.default_rng(2)
-    m, n = 512, 512
+    m, n = (256, 256) if smoke() else (512, 512)
     a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
-    bm, bn = 256, 128
+    plan = tune.plan(op="ata", m=m, n=n)
+    bm, bn = plan.syrk_blocks
+    bm, bn = min(bm, m), min(bn, n)
     nb = -(-n // bn)
     tri = nb * (nb + 1) // 2
     wr = {mode: syrk_write_traffic(n, bn, mode) for mode in ("packed", "dual", "mirror")}
-    t = time_fn(lambda a: syrk(a, blocks=(bm, bn), interpret=True), a, iters=2, warmup=1)
+    t = time_fn(lambda a: syrk(a, plan=plan, interpret=True), a, iters=2, warmup=1)
     emit(
         f"kernel_syrk_{m}x{n}",
         t,
         f"grid_tiles={tri} full_tiles={nb*nb} "
         f"mxu_work_fraction={tri/(nb*nb):.3f} "
         f"write_bytes_dual={wr['dual']} write_bytes_seed_mirror={wr['mirror']} "
-        f"interpret=True",
+        f"blocks=({bm},{bn}) interpret=True",
         shape=(m, n),
         mode="dense",
         grid_tiles=tri,
         write_bytes=wr["dual"],
+        blocks=[bm, bn],
     )
     t_packed = time_fn(
-        lambda a: syrk(a, blocks=(bm, bn), interpret=True, out="packed"),
+        lambda a: syrk(a, plan=plan, interpret=True, out="packed"),
         a, iters=2, warmup=1,
     )
     emit(
@@ -58,7 +66,7 @@ def run():
     # batched: one launch over a leading batch grid dimension (no vmap)
     ab = jnp.asarray(rng.standard_normal((4, m // 2, n // 2)), jnp.float32)
     t_b = time_fn(
-        lambda x: syrk(x, blocks=(bm, bn), interpret=True, out="packed"),
+        lambda x: syrk(x, plan=plan, interpret=True, out="packed"),
         ab, iters=2, warmup=1,
     )
     emit(
@@ -69,16 +77,17 @@ def run():
         mode="packed",
     )
     b = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
-    t = time_fn(lambda a, b: gemm_tn(a, b, blocks=(bm, bn, bn), interpret=True),
+    gplan = tune.plan(op="gemm_tn", m=m, n=n, k=n)
+    t = time_fn(lambda a, b: gemm_tn(a, b, plan=gplan, interpret=True),
                 a, b, iters=2, warmup=1)
     emit(f"kernel_gemm_tn_{m}x{n}", t, f"grid_tiles={nb*nb} interpret=True",
          shape=(m, n))
     # correctness cross-checks in the bench harness itself
-    err = float(jnp.abs(syrk(a, blocks=(bm, bn), interpret=True) - syrk_ref(a)).max())
+    err = float(jnp.abs(syrk(a, plan=plan, interpret=True) - syrk_ref(a)).max())
     emit("kernel_syrk_maxerr", 0.0, f"max_abs_err={err:.2e}")
     err_p = float(
         jnp.abs(
-            syrk(a, blocks=(bm, bn), interpret=True, out="packed").to_dense()
+            syrk(a, plan=plan, interpret=True, out="packed").to_dense()
             - syrk_ref(a)
         ).max()
     )

@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, smoke, time_fn
+from repro import tune
 from repro.core import ata_batched
 from repro.core.reference import ata_flops, classical_syrk_flops
 from repro.optim import constant
@@ -26,15 +27,19 @@ from repro.optim.shampoo import shampoo
 
 def _gram_bench():
     rng = np.random.default_rng(3)
-    for nb, blk in [(8, 512), (2, 1024), (1, 2048)]:
+    cases = [(8, 512), (2, 1024), (1, 2048)]
+    if smoke():
+        cases = [(8, 512)]
+    for nb, blk in cases:
         g = jnp.asarray(rng.standard_normal((nb, blk, blk)), jnp.float32)
-        f_ata = jax.jit(lambda x: ata_batched(x, n_base=256))
-        f_packed = jax.jit(lambda x: ata_batched(x, n_base=256, out="packed"))
+        plan = tune.plan(op="ata", m=blk, n=blk, batch=nb)
+        f_ata = jax.jit(lambda x: ata_batched(x, plan=plan))
+        f_packed = jax.jit(lambda x: ata_batched(x, plan=plan, out="packed"))
         f_ref = jax.jit(lambda x: jnp.einsum("bmi,bmj->bij", x, x))
         t_ata = time_fn(f_ata, g)
         t_packed = time_fn(f_packed, g)
         t_ref = time_fn(f_ref, g)
-        ratio = ata_flops(blk, blk, 256) / classical_syrk_flops(blk, blk)
+        ratio = ata_flops(blk, blk, plan.n_base) / classical_syrk_flops(blk, blk)
         emit(
             f"shampoo_grams_{nb}x{blk}",
             t_ata,
@@ -74,8 +79,7 @@ def _step_bench():
         # refresh into the update — the allclose below then certifies the
         # packed path end-to-end, not just the decay accumulation.
         opt = shampoo(
-            constant(1e-3), block=512, update_every=1, n_base=256,
-            packed_grams=packed, gram_block=64,
+            constant(1e-3), block=512, update_every=1, packed_grams=packed,
         )
         state = opt.init(params)
         step = jax.jit(lambda g, s, p: opt.update(g, s, p))

@@ -24,7 +24,7 @@ from repro.core.distributed import ata_tile_parallel
 mesh = make_mesh((len(jax.devices()),), ("model",))
 r = np.random.default_rng(0)
 a = jnp.asarray(r.standard_normal(({m}, {n})), jnp.float32)
-f = jax.jit(lambda a: ata_tile_parallel(a, mesh, task_axis="model", n_base=256))
+f = jax.jit(lambda a: ata_tile_parallel(a, mesh, task_axis="model"))
 out = f(a); jax.block_until_ready(out)
 ts = []
 for _ in range(5):

@@ -10,25 +10,35 @@ show the same effect.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import effective_gflops, emit, time_fn
+from benchmarks.common import effective_gflops, emit, smoke, time_fn
+from repro import tune
 from repro.core import strassen_tn
 from repro.core.reference import classical_gemm_flops, strassen_tn_flops
-
-N_BASE = 256
 
 
 def run():
     rng = np.random.default_rng(1)
-    for m, n, k in [(1024, 1024, 1024), (2048, 2048, 2048), (4096, 1024, 1024)]:
+    shapes = [(1024, 1024, 1024), (2048, 2048, 2048), (4096, 1024, 1024)]
+    if smoke():
+        shapes = [(1024, 1024, 1024)]
+    for m, n, k in shapes:
         a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
         b = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
 
-        f_st = jax.jit(lambda a, b: strassen_tn(a, b, n_base=N_BASE))
-        f_wg = jax.jit(lambda a, b: strassen_tn(a, b, n_base=N_BASE, variant="winograd"))
+        # planner decision per shape; Strassen/Winograd compared on the
+        # same planned cutoff (the figure contrasts the two schedules).
+        plan = tune.plan(op="gemm_tn", m=m, n=n, k=k)
+        if plan.algorithm == "dense":  # figure needs the recursion itself
+            plan = dataclasses.replace(plan, algorithm="strassen")
+        plan_wg = dataclasses.replace(plan, algorithm="winograd")
+        f_st = jax.jit(lambda a, b: strassen_tn(a, b, plan=plan))
+        f_wg = jax.jit(lambda a, b: strassen_tn(a, b, plan=plan_wg))
         f_ref = jax.jit(
             lambda a, b: jax.lax.dot_general(
                 a, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
@@ -38,8 +48,8 @@ def run():
         t_wg = time_fn(f_wg, a, b)
         t_ref = time_fn(f_ref, a, b)
         # the "naive Strassen" analogue: retrace + realloc every call
-        t_nojit = time_fn(lambda a, b: strassen_tn(a, b, n_base=N_BASE), a, b, iters=3)
-        ratio = strassen_tn_flops(m, n, k, N_BASE) / classical_gemm_flops(m, n, k)
+        t_nojit = time_fn(lambda a, b: strassen_tn(a, b, plan=plan), a, b, iters=3)
+        ratio = strassen_tn_flops(m, n, k, plan.n_base) / classical_gemm_flops(m, n, k)
         emit(
             f"fig4_strassen_{m}x{n}x{k}",
             t_st,

@@ -1,0 +1,76 @@
+"""Planner benchmark: measured autotuned plans vs the hardcoded defaults.
+
+For every benchmarked shape, run the measured autotuner
+(`repro.tune.plan(..., autotune=True)`, persisted in a run-local cache
+file) and report its **own interleaved measurement** against the
+pre-tune-subsystem hardcoded configuration: the autotuner times every
+candidate `time_pair`-interleaved with the default plan (load drift hits
+both equally) and only displaces the default on a win beyond its noise
+margin. `speedup_vs_default` is therefore ≥ 1.0 *by construction*: exactly
+1.0 when the default survives the sweep, > 1 + margin when a candidate
+genuinely beat it. (A fresh independent re-measure on this ±20-30%-jitter
+container would be a coin flip, not information — see the timing notes in
+``repro.tune.search``.)
+
+Rows land in ``BENCH_tune.json`` with the full chosen plan; the tuned-plan
+cache file is the artifact DESIGN.md §7 describes regenerating.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+from benchmarks.common import emit, smoke
+from repro import tune
+
+
+def run():
+    shapes = [(512, 512), (1024, 1024), (2048, 512), (4096, 1024)]
+    if smoke():
+        shapes = [(512, 512), (1024, 256)]
+
+    cache_file = os.environ.get("REPRO_TUNE_CACHE")
+    if cache_file is None:
+        # BENCH_tune.json tracks the perf trajectory across PRs, so every
+        # un-configured run must RE-tune: drop the scratch cache from any
+        # previous run. Set REPRO_TUNE_CACHE to opt into persistence.
+        cache_file = os.path.join(
+            tempfile.gettempdir(), "repro_bench_tune_cache.json"
+        )
+        if os.path.exists(cache_file):
+            os.remove(cache_file)
+
+    for m, n in shapes:
+        tuned = tune.plan(
+            op="ata", m=m, n=n, autotune=True, cache_file=cache_file,
+        )
+        t_tuned = tuned.measured_s or 0.0
+        t_def = tuned.baseline_s or t_tuned
+        ratio = t_def / t_tuned if t_tuned else 1.0
+        base = tune.cost.default_plan("ata", m, n)
+        kept_default = tune.search._same_dispatch(tuned, base)
+        emit(
+            f"tune_ata_{m}x{n}",
+            t_tuned,
+            f"algo={tuned.algorithm} n_base={tuned.n_base} out={tuned.out} "
+            f"src={tuned.source} default_us={t_def*1e6:.1f} "
+            f"speedup_vs_default={ratio:.3f} kept_default={kept_default}",
+            shape=(m, n),
+            default_seconds=t_def,
+            speedup_vs_default=round(ratio, 4),
+            kept_default=kept_default,
+            plan=tuned.to_json(),
+            default_plan=base.to_json(),
+        )
+
+    emit(
+        "tune_cache_file",
+        0.0,
+        f"cache={cache_file} entries={len(tune.cache.load_cache(cache_file))}",
+        cache_file=cache_file,
+    )
+
+
+if __name__ == "__main__":
+    run()

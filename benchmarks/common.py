@@ -1,51 +1,38 @@
 """Shared benchmark helpers: timing, CSV output, effective-GFLOPs metric,
-and machine-readable row collection (``BENCH_*.json``, written by ``run.py``)."""
+and machine-readable row collection (``BENCH_*.json``, written by ``run.py``).
+
+The warmup/median timing discipline itself lives in
+``repro.tune.search`` — one implementation shared by the measured
+autotuner and every benchmark, re-exported here unchanged."""
 
 from __future__ import annotations
 
-import time
+import os
 
-import jax
-import numpy as np
+# single timing discipline, shared with the measured autotuner
+from repro.tune.search import time_fn, time_pair  # noqa: F401  (re-export)
 
-__all__ = ["time_fn", "time_pair", "effective_gflops", "emit", "drain_rows"]
+__all__ = [
+    "time_fn",
+    "time_pair",
+    "effective_gflops",
+    "emit",
+    "drain_rows",
+    "smoke",
+    "SMOKE",
+]
 
 # rows emitted since the last drain — run.py drains after each bench module
 # and writes them to BENCH_<module>.json so the perf trajectory is tracked.
 _ROWS: list = []
 
-
-def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
-    """Median wall time (s) of fn(*args) with device sync."""
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+# --smoke (run.py) / REPRO_BENCH_SMOKE=1: bench modules shrink their shape
+# sweeps and iteration counts to CI scale.
+SMOKE = False
 
 
-def time_pair(fn_a, fn_b, *args, iters: int = 7, warmup: int = 2):
-    """Median wall times of two functions measured **interleaved** (A, B,
-    A, B, …) so background load drift hits both equally — use this when the
-    quantity of interest is the ratio between the two (e.g. packed vs dense
-    on a shared, throttled CPU container)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn_a(*args))
-        jax.block_until_ready(fn_b(*args))
-    ta, tb = [], []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn_a(*args))
-        ta.append(time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn_b(*args))
-        tb.append(time.perf_counter() - t0)
-    return float(np.median(ta)), float(np.median(tb))
+def smoke() -> bool:
+    return SMOKE or os.environ.get("REPRO_BENCH_SMOKE") == "1"
 
 
 def effective_gflops(m: int, n: int, seconds: float, r: int = 1, k: int | None = None) -> float:

@@ -7,6 +7,11 @@ gflops, ...}`` rows) so the perf trajectory is tracked across PRs.
     PYTHONPATH=src python -m benchmarks.run            # all benches
     PYTHONPATH=src python -m benchmarks.run fig3 fig5  # filter by prefix
     PYTHONPATH=src python -m benchmarks.run --out results/bench
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI-scale subset
+
+``--smoke`` shrinks every module's shape sweep/iteration count
+(``common.smoke()``) and skips the subprocess-per-device-count modules
+(fig5/fig6) — minutes of wall time instead of tens.
 """
 
 from __future__ import annotations
@@ -26,16 +31,24 @@ BENCHES = [
     ("fig6_distributed_scaling", "benchmarks.bench_distributed", "distributed"),
     ("kernels_pallas", "benchmarks.bench_kernels", "kernels"),
     ("shampoo_integration", "benchmarks.bench_shampoo", "shampoo"),
+    ("tune_planner", "benchmarks.bench_tune", "tune"),
 ]
+
+# multi-process device sweeps — too slow for the CI smoke job
+_SKIP_IN_SMOKE = {"fig5_shared_memory_scaling", "fig6_distributed_scaling"}
 
 
 def main() -> None:
     args = sys.argv[1:]
     out_dir = "."
+    if "--smoke" in args:
+        args.remove("--smoke")
+        common.SMOKE = True
+        os.environ["REPRO_BENCH_SMOKE"] = "1"  # reaches bench subprocesses
     if "--out" in args:
         i = args.index("--out")
         if i + 1 >= len(args) or args[i + 1].startswith("-"):
-            raise SystemExit("usage: benchmarks.run [--out DIR] [filter ...]")
+            raise SystemExit("usage: benchmarks.run [--smoke] [--out DIR] [filter ...]")
         out_dir = args[i + 1]
         args = args[:i] + args[i + 2 :]
         os.makedirs(out_dir, exist_ok=True)
@@ -44,6 +57,9 @@ def main() -> None:
     failed = []
     for name, module, key in BENCHES:
         if filters and not any(f in name for f in filters):
+            continue
+        if common.SMOKE and not filters and name in _SKIP_IN_SMOKE:
+            print(f"# --- {name} skipped (--smoke) ---", flush=True)
             continue
         print(f"# --- {name} ({module}) ---", flush=True)
         common.drain_rows()  # isolate rows per module

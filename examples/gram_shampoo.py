@@ -30,8 +30,9 @@ def train(opt_name: str, steps: int = 150):
         "w1": jnp.asarray(rng.standard_normal((64, 32)) * 0.1, jnp.float32),
         "w2": jnp.asarray(rng.standard_normal((32, 8)) * 0.1, jnp.float32),
     }
+    # no n_base pin: the gram dispatches are planned per block shape
     opt = (adamw(constant(3e-3)) if opt_name == "adamw"
-           else shampoo(constant(3e-3), block=32, update_every=5, n_base=8))
+           else shampoo(constant(3e-3), block=32, update_every=5))
     state = opt.init(params)
 
     def loss_fn(p):
@@ -63,7 +64,7 @@ def main():
 
     mesh = make_mesh((len(jax.devices()),), ("model",))
     a = jnp.asarray(np.random.default_rng(1).standard_normal((1024, 512)), jnp.float32)
-    c = ata_tile_parallel(a, mesh, task_axis="model", n_base=128)
+    c = ata_tile_parallel(a, mesh, task_axis="model")
     print(f"distributed gram (P={len(jax.devices())}): rel err = "
           f"{float(jnp.abs(c - a.T @ a).max() / jnp.abs(c).max()):.2e}")
 

@@ -1,65 +1,90 @@
-"""Quickstart: the paper's ATA algorithm as a composable JAX op.
+"""Quickstart: the paper's ATA algorithm as a composable, *planned* JAX op.
 
-Covers: plain ``alpha·AᵀA`` (vs the classical product), the rectangular
-FastStrassen ``AᵀB``, flop accounting (the paper's 2/3-of-Strassen claim),
-a normal-equations solve, and the Pallas kernel base case.
+Covers: the ``repro.tune.plan`` front door (plan → ata → packed result —
+the documented entry point), plain ``alpha·AᵀA`` vs the classical product,
+the rectangular FastStrassen ``AᵀB``, flop accounting (the paper's
+2/3-of-Strassen claim), a normal-equations solve, and the Pallas kernel
+base case.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import tune
 from repro.core import ata, strassen_tn
 from repro.core.reference import (
     ata_flops,
     classical_syrk_flops,
     strassen_tn_flops,
 )
-from repro.kernels import gemm_tn, syrk
 
 
 def main():
     rng = np.random.default_rng(0)
 
-    # --- 1. AᵀA, any rectangular shape, jit/vmap/grad-compatible ----------
+    # --- 1. the front door: plan → ata → packed result ---------------------
+    # Every dispatch tunable (algorithm variant, recursion cutoff, kernel
+    # blocks, packed block size) is decided by the cost model — or by the
+    # measured autotuner with plan(..., autotune=True) — never hardcoded.
     a = jnp.asarray(rng.standard_normal((1537, 771)), jnp.float32)  # odd dims
-    c = jax.jit(lambda a: ata(a, n_base=256))(a)
-    err = float(jnp.abs(c - a.T @ a).max() / jnp.abs(c).max())
-    print(f"ata(1537x771): rel err vs classical = {err:.2e}  "
-          f"(bitwise symmetric: {bool((c == c.T).all())})")
+    p = tune.plan(op="ata", m=1537, n=771, out="packed")
+    # cached measured plans carry measured_s but may lack a prediction
+    cost_s = p.measured_s or p.predicted_s
+    cost_str = f"{cost_s:.2e}s" if cost_s is not None else "n/a"
+    print(f"plan: algorithm={p.algorithm} n_base={p.n_base} "
+          f"packed_block={p.packed_block} backend={p.backend} "
+          f"source={p.source} cost={cost_str}")
 
-    # --- 2. rectangular Strassen AᵀB --------------------------------------
+    packed = jax.jit(lambda a: ata(a, plan=p, out="packed"))(a)
+    print(f"packed result: {packed.t_total} lower-tri blocks of "
+          f"{packed.bn}x{packed.bn} ({packed.nbytes} bytes vs "
+          f"{packed.dense_nbytes(packed.n)} dense)")
+
+    # --- 2. dense output of the same plan is bitwise the packed mirror -----
+    dense = jax.jit(lambda a: ata(a, plan=p))(a)
+    err = float(jnp.abs(dense - a.T @ a).max() / jnp.abs(dense).max())
+    print(f"ata(1537x771): rel err vs classical = {err:.2e}  "
+          f"(bitwise symmetric: {bool((dense == dense.T).all())}, "
+          f"packed==dense: {bool((packed.to_dense() == dense).all())})")
+
+    # --- 3. rectangular Strassen AᵀB (self-planned: no plan pinned) --------
     b = jnp.asarray(rng.standard_normal((1537, 500)), jnp.float32)
-    cb = strassen_tn(a, b, n_base=256)
+    cb = strassen_tn(a, b)
     print(f"strassen_tn(AᵀB): rel err = "
           f"{float(jnp.abs(cb - a.T @ b).max() / jnp.abs(cb).max()):.2e}")
 
-    # --- 3. the paper's flop claim ----------------------------------------
+    # --- 4. the paper's flop claim at the planned cutoff --------------------
     n = 1 << 14
-    r_strassen = ata_flops(n, n, 512) / strassen_tn_flops(n, n, n, 512)
-    r_classic = ata_flops(n, n, 512) / classical_syrk_flops(n, n)
-    print(f"flops @ n=16384: ATA/Strassen = {r_strassen:.3f} (→ 2/3), "
-          f"ATA/classical-syrk = {r_classic:.3f}")
+    big = tune.plan(op="ata", m=n, n=n)
+    nb = big.n_base
+    r_strassen = ata_flops(n, n, nb) / strassen_tn_flops(n, n, n, nb)
+    r_classic = ata_flops(n, n, nb) / classical_syrk_flops(n, n)
+    print(f"flops @ n=16384 (planned n_base={nb}): ATA/Strassen = "
+          f"{r_strassen:.3f} (→ 2/3), ATA/classical-syrk = {r_classic:.3f}")
 
-    # --- 4. application: least squares via normal equations ----------------
+    # --- 5. application: least squares via normal equations ----------------
     x_true = rng.standard_normal(771).astype(np.float32)
     y = a @ x_true + 0.01 * rng.standard_normal(1537).astype(np.float32)
-    gram = ata(a, n_base=256) + 1e-4 * jnp.eye(771)
+    gram = ata(a, plan=p) + 1e-4 * jnp.eye(771)
     x_hat = jnp.linalg.solve(gram, a.T @ y)
     print(f"normal equations: ||x̂ − x||/||x|| = "
           f"{float(jnp.linalg.norm(x_hat - x_true) / jnp.linalg.norm(x_true)):.3e}")
 
-    # --- 5. Pallas kernels as the recursion base case ----------------------
+    # --- 6. Pallas kernels as the recursion base case -----------------------
+    # On TPU the planner sets use_kernels=True by itself; forcing it here
+    # shows the same plan driving the Pallas base engines (interpret mode
+    # on CPU, so keep the operand small).
     a_small = jnp.asarray(rng.standard_normal((512, 384)), jnp.float32)
-    c_k = ata(
-        a_small,
-        n_base=128,
-        base_syrk=lambda x: syrk(x, blocks=(128, 128)),
-        base_dot=lambda x, y: gemm_tn(x, y, blocks=(128, 128, 128)),
+    pk = dataclasses.replace(
+        tune.plan(op="ata", m=512, n=384), use_kernels=True
     )
-    print(f"ata with Pallas base (interpret on CPU): rel err = "
+    c_k = ata(a_small, plan=pk)  # base_syrk/base_dot built from the plan
+    print(f"ata with Pallas base (interpret on CPU): max err = "
           f"{float(jnp.abs(c_k - a_small.T @ a_small).max()):.2e}")
 
 

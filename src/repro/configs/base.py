@@ -182,9 +182,10 @@ class OptimizerConfig:
     shampoo_block: int = 1024
     shampoo_update_every: int = 10
     shampoo_grafting: str = "adam"
-    # ATA recursion cutoff for the gram statistics; >= shampoo_block
-    # disables Strassen entirely (classical-gram baseline)
-    shampoo_n_base: int = 256
+    # ATA recursion cutoff for the gram statistics. None (default) defers
+    # to the repro.tune planner per gram shape; >= shampoo_block disables
+    # Strassen entirely (classical-gram baseline)
+    shampoo_n_base: Optional[int] = None
     # ZeRO-1 optimizer-state sharding over the data axis
     zero1: bool = True
     # PowerSGD gradient compression (rank 0 = off)

@@ -34,6 +34,11 @@ and ``shard_map`` (used by ``repro.core.distributed``). ``ata_batched`` runs
 the same recursion with an explicit leading batch dimension — one trace, one
 kernel launch per base tile over the whole batch — which is what the
 blocked-Shampoo optimizer uses for its per-block gram statistics.
+
+Dispatch tunables (cutoff, variant, kernel blocks, packed block) resolve
+through the ``repro.tune`` planning layer: pass a frozen ``plan=``, pin
+values manually, or pass nothing and let the front door decide
+(see DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -44,13 +49,18 @@ from typing import Callable, NamedTuple, Optional, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.strassen import DEFAULT_N_BASE, _dot_tn, _rec_strassen, _rec_winograd
+from repro.core.strassen import (
+    DEFAULT_N_BASE,
+    _dot_tn,
+    _plan_base_fns,
+    _rec_strassen,
+    _rec_winograd,
+    resolve_tunables,
+)
 from repro.core.symmetric import SymmetricMatrix, default_block_size, sym_tile
+from repro.tune.defaults import DEFAULT_PACKED_BLOCK  # re-export
 
 __all__ = ["ata", "ata_batched", "DEFAULT_N_BASE", "DEFAULT_PACKED_BLOCK"]
-
-# Default block size of the packed (SymmetricMatrix) output grid.
-DEFAULT_PACKED_BLOCK = 128
 
 
 def _syrk_base(a, acc_dtype):
@@ -220,6 +230,7 @@ def _ata_impl(
     alpha,
     c,
     beta,
+    plan,
     n_base,
     variant,
     base_syrk,
@@ -228,10 +239,17 @@ def _ata_impl(
     out,
     packed_block,
 ):
-    if variant not in ("strassen", "winograd"):
-        raise ValueError(f"unknown variant {variant!r}")
     if out not in ("dense", "packed"):
         raise ValueError(f"unknown output mode {out!r}; use 'dense' or 'packed'")
+    plan, n_base, variant, packed_block = resolve_tunables(
+        plan, n_base, variant, packed_block,
+        op="ata", m=a.shape[-2], n=a.shape[-1],
+        batch=a.shape[0] if a.ndim > 2 else 0,
+        dtype=str(a.dtype), out=out,
+    )
+    if variant not in ("strassen", "winograd"):
+        raise ValueError(f"unknown variant {variant!r}")
+    base_syrk, base_dot = _plan_base_fns(plan, base_syrk, base_dot)
     if base_syrk is None:
         base_syrk = functools.partial(_syrk_base, acc_dtype=acc_dtype)
     if base_dot is None:
@@ -277,13 +295,14 @@ def ata(
     alpha: float = 1.0,
     c: Optional[Union[jax.Array, SymmetricMatrix]] = None,
     beta: float = 1.0,
-    n_base: int = DEFAULT_N_BASE,
-    variant: str = "strassen",
+    plan=None,
+    n_base: Optional[int] = None,
+    variant: Optional[str] = None,
     base_syrk: Optional[Callable] = None,
     base_dot: Optional[Callable] = None,
     acc_dtype=jnp.float32,
     out: str = "dense",
-    packed_block: int = DEFAULT_PACKED_BLOCK,
+    packed_block: Optional[int] = None,
 ) -> Union[jax.Array, SymmetricMatrix]:
     """``C = alpha·AᵀA (+ beta·C)`` via the paper's ATA algorithm.
 
@@ -292,14 +311,21 @@ def ata(
         floor/ceil split here and virtual padding inside Strassen).
       alpha, c, beta: BLAS-style scaling/accumulation. With ``out='packed'``,
         ``c`` must itself be a ``SymmetricMatrix`` of matching layout.
+      plan: a frozen :class:`repro.tune.Plan` carrying every tunable
+        (cutoff, variant, kernel blocks, packed block). With no plan and no
+        pinned tunables the dispatch is planned through ``repro.tune.plan``
+        — the analytic cost model, or a measured plan from the cache.
+        Note the output *type* always follows ``out``, never the plan.
       n_base: recursion cutoff; tiles with any dim ≤ n_base go to the base
         syrk/gemm. The TPU analogue of the paper's "fits in cache".
+        Pinning this (or ``variant``/``packed_block``) manually bypasses
+        the planner and fills the rest from ``repro.tune.defaults``.
       variant: Strassen variant for the C21 off-diagonal products —
         ``'strassen'`` (paper-faithful) or ``'winograd'`` (beyond-paper,
         15 adds).
       base_syrk: base-case ``f(a) -> aᵀa`` (full, bitwise-symmetric tile).
-        Defaults to a TN dot_general; pass ``repro.kernels.ops.syrk`` for the
-        Pallas kernel.
+        Defaults to a TN dot_general (or the plan's Pallas kernel); pass
+        ``repro.kernels.ops.syrk`` to force the kernel.
       base_dot: base-case ``f(a, b) -> aᵀb`` for the Strassen leaves.
       acc_dtype: accumulation dtype.
       out: ``'dense'`` → ``(n, n)`` full symmetric array (one mirror, at the
@@ -318,6 +344,7 @@ def ata(
         alpha=alpha,
         c=c,
         beta=beta,
+        plan=plan,
         n_base=n_base,
         variant=variant,
         base_syrk=base_syrk,
@@ -334,13 +361,14 @@ def ata_batched(
     alpha: float = 1.0,
     c: Optional[Union[jax.Array, SymmetricMatrix]] = None,
     beta: float = 1.0,
-    n_base: int = DEFAULT_N_BASE,
-    variant: str = "strassen",
+    plan=None,
+    n_base: Optional[int] = None,
+    variant: Optional[str] = None,
     base_syrk: Optional[Callable] = None,
     base_dot: Optional[Callable] = None,
     acc_dtype=jnp.float32,
     out: str = "dense",
-    packed_block: int = DEFAULT_PACKED_BLOCK,
+    packed_block: Optional[int] = None,
 ) -> Union[jax.Array, SymmetricMatrix]:
     """Batched ``C_b = alpha·A_bᵀA_b`` for ``a: (B, m, n)`` — one trace.
 
@@ -359,6 +387,7 @@ def ata_batched(
         alpha=alpha,
         c=c,
         beta=beta,
+        plan=plan,
         n_base=n_base,
         variant=variant,
         base_syrk=base_syrk,

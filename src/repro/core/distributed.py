@@ -48,13 +48,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.ata import ata
-from repro.core.strassen import DEFAULT_N_BASE, strassen_tn
+from repro.core.strassen import strassen_tn
 
 __all__ = [
     "gram_rowshard",
     "ata_tile_parallel",
     "gemm_tn_colshard",
     "choose_tiling",
+    "tile_parallel_device_flops",
 ]
 
 
@@ -67,18 +68,24 @@ def gram_rowshard(
     a_local: jax.Array,
     axis: str,
     *,
-    n_base: int = DEFAULT_N_BASE,
-    variant: str = "strassen",
-    use_ata: bool = True,
+    plan=None,
+    n_base: Optional[int] = None,
+    variant: Optional[str] = None,
+    use_ata: Optional[bool] = None,
 ) -> jax.Array:
     """Per-device gram + all-reduce. Call **inside** shard_map/pjit-manual.
 
     ``a_local`` is this device's row block; the result is the full replicated
     ``AᵀA``. The local product uses the sequential ATA algorithm, so the
-    paper's 2/3-Strassen flop saving applies on every chip.
+    paper's 2/3-Strassen flop saving applies on every chip. Tunables resolve
+    through the planner (`repro.tune.plan` on the local shape) unless pinned;
+    ``use_ata=False`` — or a plan whose algorithm is ``'dense'`` — falls back
+    to the classical one-dot gram.
     """
+    if use_ata is None:
+        use_ata = plan is None or plan.algorithm != "dense"
     local = (
-        ata(a_local, n_base=n_base, variant=variant)
+        ata(a_local, plan=plan, n_base=n_base, variant=variant)
         if use_ata
         else jax.lax.dot_general(
             a_local, a_local, (((0,), (0,)), ((), ())),
@@ -96,26 +103,13 @@ def gram_rowshard(
 def choose_tiling(n: int, p: int, target_tiles_per_dev: int = 2) -> tuple[int, int]:
     """Pick (nb, w): nb stripe count, w stripe width (multiple of 8).
 
-    Wants: T = nb(nb+1)/2 ≥ p (enough tasks), small T mod p (balance),
-    w reasonably large (MXU efficiency). Searches a small static range.
+    Delegates to the planner's distributed branch
+    (`repro.tune.cost.distributed_tiling`) — kept as the public name the
+    SPMD schedules and tests use.
     """
-    nb_min = max(1, math.ceil((math.sqrt(8 * p + 1) - 1) / 2))
-    best = None
-    for nb in range(nb_min, 4 * nb_min + 8):
-        t = nb * (nb + 1) // 2
-        if t < p:
-            continue
-        per = -(-t // p)
-        waste = per * p - t
-        w = -(-n // nb)
-        w = -(-w // 8) * 8  # round width up to sublane multiple
-        score = (waste * w * w, -w)  # minimize wasted flops, prefer wide tiles
-        if best is None or score < best[0]:
-            best = (score, nb, w)
-        if t >= target_tiles_per_dev * p and waste == 0:
-            break
-    _, nb, w = best
-    return nb, w
+    from repro.tune.cost import distributed_tiling
+
+    return distributed_tiling(n, p, target_tiles_per_dev)
 
 
 def _tri_coords_traced(t):
@@ -134,8 +128,9 @@ def ata_tile_parallel(
     task_axis: str = "model",
     row_axis: Optional[str] = None,
     alpha: float = 1.0,
-    n_base: int = DEFAULT_N_BASE,
-    variant: str = "strassen",
+    plan=None,
+    n_base: Optional[int] = None,
+    variant: Optional[str] = None,
     use_strassen: bool = True,
     nb: Optional[int] = None,
     interpret_tiles: bool = False,
@@ -151,16 +146,35 @@ def ata_tile_parallel(
       row_axis: optional mesh axis across which the contraction dimension is
         sharded (ATA-D's two-level layout). Partial tiles are psum'ed as a
         packed stack (≈ n²/2 words — the paper's low(C) retrieval saving).
-      nb: stripe count override (default: :func:`choose_tiling`).
+      plan: :class:`repro.tune.Plan` (its ``nb``/``tile_w`` distributed
+        branch supplies the stripe tiling; ``n_base``/``variant`` feed the
+        leaf-level Strassen). Default: the planner front door with
+        ``devices=p_task``.
+      nb: stripe count override (default: the plan / :func:`choose_tiling`).
 
     Returns:
       Full symmetric ``(n, n)`` C, replicated over the mesh.
     """
     m, n = a.shape
     p_task = mesh.shape[task_axis]
+    if plan is None and n_base is None and variant is None and nb is None:
+        from repro.tune import plan as _plan_fn
+
+        plan = _plan_fn(op="ata", m=m, n=n, dtype=str(a.dtype), devices=p_task)
+    w = None
+    if plan is not None:
+        n_base = plan.n_base if n_base is None else n_base
+        variant = plan.variant if variant is None else variant
+        if plan.algorithm == "dense":
+            use_strassen = False
+        # adopt the plan's stripe tiling only if it was built for THIS
+        # problem — a plan for another width would tile (and silently
+        # truncate) the wrong column range.
+        if nb is None and plan.devices == p_task and plan.n == n and plan.nb:
+            nb, w = plan.nb, plan.tile_w
     if nb is None:
         nb, w = choose_tiling(n, p_task)
-    else:
+    elif w is None:
         w = -(-n // nb)
         w = -(-w // 8) * 8
     n_pad = nb * w
@@ -172,8 +186,6 @@ def ata_tile_parallel(
 
     def local_fn(a_local):
         p = jax.lax.axis_index(task_axis)
-        ts = p * t_per + jnp.arange(t_per, dtype=jnp.int32)
-        ts = jnp.minimum(ts, t_total - 1)  # clamp dummies (recomputed, ignored)
 
         def compute_tile(t):
             i, j = _tri_coords_traced(t)
@@ -186,10 +198,30 @@ def ata_tile_parallel(
                 preferred_element_type=jnp.float32,
             )
 
+        def tile_slot(q):
+            """Slot q of this device: tile p·t_per+q, or a zero dummy.
+
+            When T % p ≠ 0 the trailing devices own dummy slots. The seed
+            clamped them to tile T−1 and recomputed it up to t_per−1 extra
+            times per device; dummies are now **masked to a zero tile**
+            behind ``lax.cond`` — real control flow, so the dot never runs —
+            which restores the exact LPT flop model
+            (:func:`tile_parallel_device_flops`, regression-tested).
+            Slots that are valid on *every* device skip the cond statically.
+            """
+            g = p * t_per + q
+            if (p_task - 1) * t_per + q < t_total:
+                return compute_tile(g)
+            return jax.lax.cond(
+                g < t_total,
+                lambda: compute_tile(jnp.minimum(g, t_total - 1)),
+                lambda: jnp.zeros((w, w), jnp.float32),
+            )
+
         # python-unrolled tile loop (t_per is small): keeps every tile's
         # matmuls visible to XLA's cost model (lax.map would count the body
         # once) and lets XLA schedule tiles independently.
-        tiles = jnp.stack([compute_tile(ts[q]) for q in range(t_per)])
+        tiles = jnp.stack([tile_slot(q) for q in range(t_per)])
         if row_axis is not None:
             # packed retrieval: reduce the tile stack, not a dense (n, n)
             tiles = jax.lax.psum(tiles, row_axis)
@@ -213,6 +245,56 @@ def ata_tile_parallel(
     return c
 
 
+def tile_parallel_device_flops(
+    m: int,
+    n: int,
+    p: int,
+    *,
+    nb: Optional[int] = None,
+    n_base: Optional[int] = None,
+    use_strassen: Optional[bool] = None,
+    dtype: str = "float32",
+) -> list:
+    """Exact per-device flops of :func:`ata_tile_parallel`'s masked schedule.
+
+    Device ``d`` computes its valid contiguous slots only — dummy slots are
+    cond-masked zero tiles, not recomputed clamps — so the per-device counts
+    are ``t_per`` (or fewer) uniform-tile flop counts and the total over
+    devices is exactly ``T`` tiles' worth: the LPT model of ``T`` equal
+    tasks. Mirrors the tile compute path via the reference counters —
+    including the tunable resolution: unpinned ``n_base``/``use_strassen``
+    resolve through the same planner front door the execution path
+    consults, so the model counts what the default dispatch actually runs
+    (pass the operand's ``dtype`` — the plan, and hence the recursion, is
+    keyed on it).
+    """
+    from repro.core.reference import classical_gemm_flops, strassen_tn_flops
+
+    if n_base is None or use_strassen is None:
+        from repro.tune import plan as _plan_fn
+
+        pl = _plan_fn(op="ata", m=m, n=n, dtype=dtype, devices=p)
+        n_base = pl.n_base if n_base is None else n_base
+        use_strassen = (
+            (pl.algorithm != "dense") if use_strassen is None else use_strassen
+        )
+    if nb is None:
+        nb, w = choose_tiling(n, p)
+    else:
+        w = -(-n // nb)
+        w = -(-w // 8) * 8
+    t_total = nb * (nb + 1) // 2
+    t_per = -(-t_total // p)
+    tile = (
+        strassen_tn_flops(m, w, w, n_base)
+        if use_strassen
+        else classical_gemm_flops(m, w, w)
+    )
+    return [
+        tile * max(0, min(t_per, t_total - d * t_per)) for d in range(p)
+    ]
+
+
 # ---------------------------------------------------------------------------
 # colshard gemm: C = AᵀB with B column-sharded (disjoint C column stripes)
 # ---------------------------------------------------------------------------
@@ -225,12 +307,14 @@ def gemm_tn_colshard(
     *,
     task_axis: str = "model",
     row_axis: Optional[str] = None,
-    n_base: int = DEFAULT_N_BASE,
-    variant: str = "strassen",
+    plan=None,
+    n_base: Optional[int] = None,
+    variant: Optional[str] = None,
     use_strassen: bool = True,
 ) -> jax.Array:
     """Distributed ``C = AᵀB``: each device owns C's column stripe for its
-    B shard — the FastStrassen leaves of the task tree, collision-free."""
+    B shard — the FastStrassen leaves of the task tree, collision-free.
+    Leaf tunables resolve through the planner unless pinned."""
     m, n = a.shape
     mb, k = b.shape
     if m != mb:
@@ -238,6 +322,13 @@ def gemm_tn_colshard(
     p_task = mesh.shape[task_axis]
     if k % p_task:
         raise ValueError(f"k={k} must divide task axis {p_task}")
+    if plan is not None:
+        n_base = plan.n_base if n_base is None else n_base
+        variant = plan.variant if variant is None else variant
+        if plan.algorithm == "dense":
+            use_strassen = False
+    # unpinned n_base/variant fall through to strassen_tn, which self-plans
+    # on the per-device leaf shape (m, n, k/p) — every dispatch is planned.
 
     def local_fn(a_local, b_local):
         if use_strassen:

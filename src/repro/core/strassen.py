@@ -35,17 +35,80 @@ This is the paper's FastStrassen (Algorithm 1, lines 14-18) adapted to JAX/TPU:
 from __future__ import annotations
 
 import functools
+import math
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["strassen_tn", "DEFAULT_N_BASE"]
+from repro.tune.defaults import DEFAULT_N_BASE  # re-export (tunables live there)
 
-# Default recursion cutoff. 512 keeps every base-case matmul dimension a
-# multiple of the 128-wide MXU while allowing 3-5 Strassen levels on the gram
-# shapes that appear in the framework (d_model/d_ff up to 33792).
-DEFAULT_N_BASE = 512
+__all__ = ["strassen_tn", "DEFAULT_N_BASE", "resolve_tunables"]
+
+
+def resolve_tunables(
+    plan,
+    n_base,
+    variant,
+    packed_block,
+    *,
+    op: str,
+    m: int,
+    n: int,
+    k: Optional[int] = None,
+    batch: int = 0,
+    dtype: str = "float32",
+    out: str = "dense",
+):
+    """Fill unset tunables (shared by `strassen_tn`, `ata`, `distributed`).
+
+    Three regimes, in order:
+
+    * a ``plan`` was handed in → unset args come from it;
+    * no algorithm tunable (``n_base``/``variant``) was pinned → consult the
+      ``repro.tune.plan`` front door (analytic model / plan cache) — every
+      default dispatch is planned (``packed_block`` is a storage-layout
+      parameter, not an algorithm choice: pinning it alone — as packed
+      producers must, for cross-producer layout compatibility — does not
+      bypass the planner);
+    * the caller pinned an algorithm tunable manually → fill the rest with
+      the static paper-faithful defaults (``repro.tune.defaults``),
+      **without** consulting the planner, so explicit calls stay bitwise
+      reproducible regardless of cache state.
+
+    Returns ``(plan_or_None, n_base, variant, packed_block)``; a plan with
+    ``algorithm='dense'`` comes back with ``n_base`` covering the whole
+    operand, which is how "classical one-dot dispatch" is expressed to the
+    recursion.
+    """
+    from repro.tune import defaults as _defaults
+
+    if plan is None and n_base is None and variant is None:
+        from repro.tune import plan as _plan_fn
+
+        plan = _plan_fn(op=op, m=m, n=n, k=k, batch=batch, dtype=dtype, out=out)
+    if plan is not None:
+        n_base = plan.n_base if n_base is None else n_base
+        variant = plan.variant if variant is None else variant
+        packed_block = plan.packed_block if packed_block is None else packed_block
+        if plan.algorithm == "dense":
+            n_base = max(n_base, m, n, k or n)
+    else:
+        n_base = _defaults.DEFAULT_N_BASE if n_base is None else n_base
+        variant = _defaults.DEFAULT_VARIANT if variant is None else variant
+        packed_block = (
+            _defaults.DEFAULT_PACKED_BLOCK if packed_block is None else packed_block
+        )
+    return plan, n_base, variant, packed_block
+
+
+def _plan_base_fns(plan, base_syrk, base_dot):
+    """Pallas base kernels per the plan (when the caller supplied none)."""
+    if plan is not None and plan.use_kernels and base_syrk is None and base_dot is None:
+        from repro.tune.apply import base_fns
+
+        return base_fns(plan)
+    return base_syrk, base_dot
 
 
 def _dot_tn(a, b, acc_dtype):
@@ -171,8 +234,9 @@ def strassen_tn(
     alpha: float = 1.0,
     c: Optional[jax.Array] = None,
     beta: float = 1.0,
-    n_base: int = DEFAULT_N_BASE,
-    variant: str = "strassen",
+    plan=None,
+    n_base: Optional[int] = None,
+    variant: Optional[str] = None,
     base_dot: Optional[Callable] = None,
     acc_dtype=jnp.float32,
 ) -> jax.Array:
@@ -184,11 +248,16 @@ def strassen_tn(
         recursion and base dot then run batched — one trace, no vmap).
       b: ``(m, k)`` right operand.
       alpha, c, beta: optional scaling/accumulation, BLAS-style.
+      plan: a frozen :class:`repro.tune.Plan` carrying every tunable. With
+        no plan and no pinned tunables, the dispatch is planned through
+        ``repro.tune.plan`` (analytic cost model / plan cache).
       n_base: recursion cutoff — any dim ≤ n_base goes to the base matmul.
+        Pinning this (or ``variant``) manually bypasses the planner.
       variant: ``'strassen'`` (paper-faithful) or ``'winograd'`` (15 adds).
       base_dot: base-case TN matmul ``f(a, b) -> aᵀb``. Defaults to a TN
-        ``dot_general`` (MXU-native). Pass ``repro.kernels.ops.gemm_tn`` to
-        use the Pallas kernel.
+        ``dot_general`` (MXU-native; the plan may swap in the Pallas
+        ``gemm_tn`` kernel). Pass ``repro.kernels.ops.gemm_tn`` explicitly
+        to force the kernel.
       acc_dtype: accumulation dtype for the base matmul
         (``preferred_element_type``).
 
@@ -202,8 +271,16 @@ def strassen_tn(
             f"contracting/batch dims mismatch: A is {a.shape}, B is {b.shape} "
             "(TN product contracts dim -2 of both; leading dims are batch)"
         )
+    plan, n_base, variant, _ = resolve_tunables(
+        plan, n_base, variant, None,
+        op="gemm_tn", m=a.shape[-2], n=a.shape[-1], k=b.shape[-1],
+        batch=math.prod(a.shape[:-2]) if a.ndim > 2 else 0,
+        dtype=str(a.dtype),
+    )
     if variant not in ("strassen", "winograd"):
         raise ValueError(f"unknown variant {variant!r}")
+    if base_dot is None:
+        _, base_dot = _plan_base_fns(plan, None, base_dot)
     if base_dot is None:
         base_dot = functools.partial(_dot_tn, acc_dtype=acc_dtype)
 

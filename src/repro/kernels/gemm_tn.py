@@ -30,10 +30,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
 
-__all__ = ["gemm_tn_pallas", "DEFAULT_BLOCKS"]
-
 # (bm, bn, bk): contraction block, output-row block, output-col block.
-DEFAULT_BLOCKS = (512, 256, 256)
+# The constant lives with every other tunable in repro.tune.defaults; the
+# autotuner sweeps alternatives per shape (repro.tune.plan → gemm_blocks).
+from repro.tune.defaults import GEMM_BLOCKS as DEFAULT_BLOCKS
+
+__all__ = ["gemm_tn_pallas", "DEFAULT_BLOCKS"]
 
 
 def _gemm_tn_kernel(a_ref, b_ref, c_ref, acc_ref, *, alpha: float):

@@ -31,6 +31,7 @@ def syrk(
     *,
     alpha: float = 1.0,
     blocks=None,
+    plan=None,
     interpret=None,
     out_dtype=jnp.float32,
     out: str = "dense",
@@ -41,9 +42,13 @@ def syrk(
     leading grid dimension — one launch). ``out='packed'`` returns the
     mirror-free :class:`repro.core.symmetric.SymmetricMatrix` form;
     ``out='dense'`` uses the in-kernel dual-write (no mirror post-pass).
+    Block shapes come from ``blocks``, else the ``plan`` (a
+    :class:`repro.tune.Plan`), else the tuned defaults.
     """
     if interpret is None:
         interpret = interpret_default()
+    if blocks is None and plan is not None:
+        blocks = plan.syrk_blocks
     return syrk_pallas(
         a,
         alpha=alpha,
@@ -55,11 +60,21 @@ def syrk(
 
 
 def gemm_tn(
-    a, b, *, alpha: float = 1.0, blocks=None, interpret=None, out_dtype=jnp.float32
+    a,
+    b,
+    *,
+    alpha: float = 1.0,
+    blocks=None,
+    plan=None,
+    interpret=None,
+    out_dtype=jnp.float32,
 ):
-    """``alpha·AᵀB`` via the Pallas TN matmul kernel."""
+    """``alpha·AᵀB`` via the Pallas TN matmul kernel (blocks from the
+    argument, else the ``plan``, else the tuned defaults)."""
     if interpret is None:
         interpret = interpret_default()
+    if blocks is None and plan is not None:
+        blocks = plan.gemm_blocks
     return gemm_tn_pallas(
         a,
         b,

@@ -49,10 +49,12 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.compat import tpu_compiler_params
 from repro.core.symmetric import SymmetricMatrix, default_block_size, sym_tile
 
-__all__ = ["syrk_pallas", "DEFAULT_BLOCKS"]
-
 # (bm, bn): contraction block, output block (output tiles are bn × bn).
-DEFAULT_BLOCKS = (512, 256)
+# The constant lives with every other tunable in repro.tune.defaults; the
+# autotuner sweeps alternatives per shape (repro.tune.plan → syrk_blocks).
+from repro.tune.defaults import SYRK_BLOCKS as DEFAULT_BLOCKS
+
+__all__ = ["syrk_pallas", "DEFAULT_BLOCKS"]
 
 
 def _tri_coords(t):

@@ -280,7 +280,7 @@ def _decode_artifacts(cfg, shape, mesh, run, serve_dtype=None, sp_decode=False):
     return out
 
 
-def _gram_artifacts(mesh, *, m=65536, n=16384, n_base=512):
+def _gram_artifacts(mesh, *, m=65536, n=16384, n_base=None):
     """The paper's own workload on the production mesh: distributed
     C = AᵀA via the ATA-S/ATA-D tile schedule (core.distributed), lowered
     and compiled in three flavors:
@@ -290,9 +290,19 @@ def _gram_artifacts(mesh, *, m=65536, n=16384, n_base=512):
       * ``winograd``  — beyond-paper 15-add variant.
 
     HLO flops show the 2/3-of-Strassen saving directly; collectives show
-    the packed-tile retrieval volume (≈ n²/2 words).
+    the packed-tile retrieval volume (≈ n²/2 words). The planned cutoff
+    and stripe count come from the repro.tune planner; the §Perf knob
+    variants sweep the planner's neighboring candidates (one cutoff step
+    down, two extra stripes) instead of hardcoded values.
     """
+    from repro import tune
     from repro.core.distributed import ata_tile_parallel
+
+    plan = tune.plan(op="ata", m=m, n=n, devices=mesh.shape["model"])
+    base = plan.n_base if n_base is None else n_base
+    alt = max((c for c in tune.defaults.N_BASE_CANDIDATES if c < base),
+              default=base)
+    wide = (plan.nb or tune.cost.distributed_tiling(n, mesh.shape["model"])[0]) + 2
 
     out = {}
     a_abs = jax.ShapeDtypeStruct((m, n), jnp.float32)
@@ -304,17 +314,17 @@ def _gram_artifacts(mesh, *, m=65536, n=16384, n_base=512):
         ("winograd", dict(use_strassen=True, variant="winograd")),
         # §Perf knobs: recursion cutoff (depth ↔ MXU-friendly leaf size)
         # and tile count (Strassen depth ↔ balance)
-        ("strassen_nb256", dict(use_strassen=True, variant="strassen",
-                                n_base=256)),
-        ("strassen_wide7", dict(use_strassen=True, variant="strassen",
-                                nb=7)),
+        (f"strassen_nb{alt}", dict(use_strassen=True, variant="strassen",
+                                   n_base=alt)),
+        (f"strassen_wide{wide}", dict(use_strassen=True, variant="strassen",
+                                      nb=wide)),
     ):
         kw = dict(kwargs)
         nb_val = kw.pop("nb", None)
-        base = kw.pop("n_base", n_base)
         fn = functools.partial(
             ata_tile_parallel, mesh=mesh, task_axis="model",
-            row_axis=row_axis, n_base=base, nb=nb_val, **kw,
+            row_axis=row_axis, n_base=kw.pop("n_base", base),
+            nb=nb_val, **kw,
         )
         jitted = jax.jit(fn, in_shardings=(in_sh,))
         out[label] = _artifact(jitted, a_abs)
@@ -343,7 +353,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
              remat: str = "full", microbatch: int = 1,
              zero1: bool = True, variant_tag: str = "",
              serve_dtype: str = "", sp_decode: bool = False,
-             shampoo_n_base: int = 256) -> dict:
+             shampoo_n_base=None) -> dict:
     if arch == "gram":
         mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
         rec = {"arch": "gram", "shape": shape_name, "mesh": mesh_kind,
@@ -416,7 +426,8 @@ def main():
     ap.add_argument("--microbatch", type=int, default=1)
     ap.add_argument("--no-zero1", action="store_true")
     ap.add_argument("--tag", default="", help="variant tag in the output name")
-    ap.add_argument("--shampoo-n-base", type=int, default=256)
+    # default None: the repro.tune planner picks the gram cutoff per shape
+    ap.add_argument("--shampoo-n-base", type=int, default=None)
     ap.add_argument("--sp-decode", action="store_true",
                     help="use the shard_map sequence-parallel flash-decode")
     ap.add_argument("--serve-dtype", default="",

@@ -47,7 +47,7 @@ def _orthonormalize(p: jax.Array, eps: float = 1e-6) -> jax.Array:
     rank than gradient rank) stays finite: null-space columns collapse to
     ~eps-scaled noise and contribute nothing to the reconstruction.
     """
-    g = ata(p, n_base=128)                       # (r, r) = pᵀp — the paper's op
+    g = ata(p)                # (r, r) = pᵀp — the paper's op, planner-dispatched
     r = p.shape[1]
     ridge = eps * (jnp.trace(g) / r + 1e-30) + 1e-30
     g = g + ridge * jnp.eye(r, dtype=g.dtype)
@@ -59,12 +59,13 @@ def _orthonormalize(p: jax.Array, eps: float = 1e-6) -> jax.Array:
 
 
 def compress(
-    g: jax.Array, state: PowerSGDState, *, n_base: int = 256
+    g: jax.Array, state: PowerSGDState, *, n_base: Optional[int] = None
 ) -> Tuple[jax.Array, jax.Array, PowerSGDState]:
     """One PowerSGD round for a (m, n) gradient.
 
     Returns (p, q, new_state): all-reduce p and q across DP, then call
-    :func:`decompress`. Error feedback is accumulated locally.
+    :func:`decompress`. Error feedback is accumulated locally. The TN
+    product is planner-dispatched unless ``n_base`` is pinned.
     """
     g = g.astype(jnp.float32) + state.error
     p = g @ state.q                                        # (m, r)

@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -159,18 +159,31 @@ def shampoo(
     weight_decay: float = 0.1,
     update_every: int = 10,
     stat_decay: float = 0.95,
-    n_base: int = 256,
-    variant: str = "strassen",
+    n_base: Optional[int] = None,
+    variant: Optional[str] = None,
     newton_iters: int = 25,
     packed_grams: bool = True,
-    gram_block: int = 128,
+    gram_block: Optional[int] = None,
 ) -> Optimizer:
     """ATA-powered blocked Shampoo with Adam grafting.
 
     ``packed_grams`` keeps the L/R gram statistics in packed symmetric form
     (about half the memory; densified only inside the preconditioner
     refresh). ``gram_block`` is the packed storage block size.
+
+    ``n_base``/``variant``/``gram_block`` default to None: the gram
+    dispatches are then planned per block shape through ``repro.tune.plan``
+    inside ``ata_batched`` (a pinned value bypasses the planner). Note the
+    reproducibility trade-off: a *measured* plan in the persistent tune
+    cache changes the gram recursion depth and hence float rounding — runs
+    on machines with different cache states can diverge bitwise (never
+    beyond normal fp reassociation). Pin ``n_base`` (e.g. via
+    ``OptimizerConfig.shampoo_n_base``) for bitwise-reproducible training.
     """
+    if gram_block is None:
+        from repro.tune.defaults import DEFAULT_PACKED_BLOCK
+
+        gram_block = DEFAULT_PACKED_BLOCK
 
     gram_b = functools.partial(ata_batched, n_base=n_base, variant=variant)
 

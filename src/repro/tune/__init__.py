@@ -1,0 +1,69 @@
+"""``repro.tune`` — cost-model + measured-autotuner planning layer.
+
+Every ATA dispatch in the repo resolves its tunables (algorithm variant,
+recursion cutoff ``n_base``, Pallas block shapes, packed-block size,
+distributed stripe tiling) through this subsystem instead of scattered
+literals:
+
+    from repro import tune
+    p = tune.plan(op="ata", m=4096, n=1024)           # analytic (cache miss)
+    p = tune.plan(op="ata", m=4096, n=1024, autotune=True)  # measured
+    c = ata(a, plan=p)                                 # or just ata(a)
+
+Modules: ``defaults`` (the single home of the tunable constants),
+``cost`` (analytic roofline model + the frozen ``Plan``), ``search``
+(measured autotuning + the shared timing discipline), ``cache``
+(JSON-persistent plan store + the ``plan()`` front door), ``apply``
+(plan → callable threading). See DESIGN.md §7.
+
+This ``__init__`` is **lazy** (PEP 562): low layers (`core`, `kernels`)
+import ``repro.tune.defaults`` at module scope, which must not drag in
+``cost``/``cache`` (they import `core` back — the planner sits *above* the
+algorithms it plans).
+"""
+
+from repro.tune import defaults  # dependency-free; safe to load eagerly
+
+__all__ = [
+    "plan",
+    "Plan",
+    "autotune",
+    "analytic_plan",
+    "default_plan",
+    "candidates",
+    "defaults",
+    "cost",
+    "search",
+    "cache",
+    "apply",
+]
+
+_LAZY = {
+    "plan": ("repro.tune.cache", "plan"),
+    "Plan": ("repro.tune.cost", "Plan"),
+    "autotune": ("repro.tune.search", "autotune"),
+    "analytic_plan": ("repro.tune.cost", "analytic_plan"),
+    "default_plan": ("repro.tune.cost", "default_plan"),
+    "candidates": ("repro.tune.cost", "candidates"),
+    "cost": ("repro.tune.cost", None),
+    "search": ("repro.tune.search", None),
+    "cache": ("repro.tune.cache", None),
+    "apply": ("repro.tune.apply", None),
+}
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.tune' has no attribute {name!r}")
+    import importlib
+
+    mod = importlib.import_module(mod_name)
+    value = mod if attr is None else getattr(mod, attr)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -1,0 +1,195 @@
+"""Persistent plan cache + the ``repro.tune.plan(...)`` front door.
+
+Resolution order for one problem key:
+
+1. **in-process memo** — every resolved Plan is memoized, so a jit trace
+   that dispatches the same shape hundreds of times pays for planning once;
+2. **JSON cache file** — *measured* plans persist across processes, keyed
+   by ``(op, m, n, k, batch, dtype, out, backend, devices, jax version)``
+   (see :func:`plan_key`; the jax version is in the key because a runtime
+   upgrade can move the Strassen crossover);
+3. **analytic model** (`tune.cost.analytic_plan`) on a cache miss — or the
+   **measured autotuner** (`tune.search.autotune`) when ``autotune=True``,
+   whose result is written back to the JSON cache.
+
+Only measured plans are persisted: the analytic model is deterministic and
+free to recompute, so writing it to disk would only let a stale file shadow
+model improvements. Consequently ``plan(...)`` is deterministic for a given
+cache state, and a cache file round-trips through JSON bit-exactly
+(`Plan.to_json`/`from_json` — tested in ``tests/test_tune.py``).
+
+Cache location: ``$REPRO_TUNE_CACHE`` if set, else
+``~/.cache/repro/tune_plans.json``. ``bench_tune`` regenerates tuned plans
+(see DESIGN.md §7): ``PYTHONPATH=src python -m benchmarks.run tune``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Optional
+
+import jax
+
+from repro.tune import cost, defaults
+
+__all__ = [
+    "plan",
+    "plan_key",
+    "cache_path",
+    "load_cache",
+    "save_cache",
+    "clear_memo",
+]
+
+_MEMO: dict = {}
+_LOCK = threading.Lock()
+_SCHEMA = "v1"
+
+
+def cache_path() -> str:
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "tune_plans.json"
+    )
+
+
+def plan_key(
+    op: str,
+    m: int,
+    n: int,
+    k: int,
+    batch: int,
+    dtype: str,
+    out: str,
+    backend: str,
+    devices: int = 1,
+) -> str:
+    """The cache key: problem identity + runtime identity (jax version)."""
+    return (
+        f"{_SCHEMA}|{op}|m={m}|n={n}|k={k}|b={batch}|{dtype}|{out}"
+        f"|{backend}|p={devices}|jax={jax.__version__}"
+    )
+
+
+def load_cache(path: Optional[str] = None) -> dict:
+    """{key: Plan} from the JSON file (empty on missing/corrupt file)."""
+    path = path or cache_path()
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+    out = {}
+    for key, d in raw.get("plans", {}).items():
+        try:
+            out[key] = cost.Plan.from_json(d)
+        except TypeError:
+            continue  # schema drift: ignore entries a newer Plan can't load
+    return out
+
+
+def save_cache(plans: dict, path: Optional[str] = None) -> str:
+    path = path or cache_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {
+        "schema": _SCHEMA,
+        "plans": {key: p.to_json() for key, p in sorted(plans.items())},
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+def clear_memo() -> None:
+    """Drop the in-process memo (tests; cache-file experiments)."""
+    with _LOCK:
+        _MEMO.clear()
+
+
+def plan(
+    op: str = "ata",
+    *,
+    m: int,
+    n: int,
+    k: Optional[int] = None,
+    batch: int = 0,
+    dtype: str = "float32",
+    out: str = "dense",
+    backend: Optional[str] = None,
+    devices: int = 1,
+    autotune: bool = False,
+    cache_file: Optional[str] = None,
+) -> cost.Plan:
+    """The front door: one frozen Plan for every ATA dispatch.
+
+    Args:
+      op: ``'ata'`` (``C = AᵀA``) or ``'gemm_tn'`` (``C = AᵀB``).
+      m, n, k: operand shape — A is (m, n), B is (m, k); k defaults to n.
+      batch: leading batch size (0 = unbatched).
+      dtype: operand dtype string (``str(a.dtype)``).
+      out: ``'dense'`` or ``'packed'`` output.
+      backend: defaults to ``jax.default_backend()``.
+      devices: task-axis size for the distributed schedules (fills the
+        plan's ``nb``/``tile_w`` stripe tiling — the planner's distributed
+        branch).
+      autotune: measure candidates instead of trusting the analytic model;
+        the winner persists to the JSON cache for future processes.
+        Single-device only — with ``devices > 1`` the plan stays analytic
+        (the autotuner cannot time the distributed schedule).
+      cache_file: cache path override (default: :func:`cache_path`).
+
+    Returns:
+      A frozen, JSON-serializable :class:`repro.tune.cost.Plan`.
+    """
+    if op not in ("ata", "gemm_tn"):
+        raise ValueError(f"unknown op {op!r}; use 'ata' or 'gemm_tn'")
+    backend = backend or jax.default_backend()
+    k = n if k is None else k
+    key = plan_key(op, m, n, k, batch, dtype, out, backend, devices)
+    memo_key = (key, cache_file, autotune)
+
+    with _LOCK:
+        hit = _MEMO.get(memo_key)
+    if hit is not None:
+        return hit
+
+    measured_now = False
+    persisted = load_cache(cache_file).get(key)
+    if persisted is not None and (persisted.source == "measured" or not autotune):
+        import dataclasses
+
+        resolved = dataclasses.replace(persisted, source="cache")
+    elif autotune and devices == 1:
+        from repro.tune import search
+
+        resolved = search.autotune(
+            op, m, n, k, batch=batch, dtype=dtype, out=out,
+            backend=backend, devices=devices,
+        )
+        plans = load_cache(cache_file)
+        plans[key] = resolved
+        save_cache(plans, cache_file)
+        measured_now = True
+    else:
+        # devices > 1 with autotune lands here too: the autotuner's timed
+        # callable is the single-device op, which says nothing about the
+        # distributed tile schedule — distributed plans stay analytic.
+        resolved = cost.analytic_plan(
+            op, m, n, k, batch=batch, dtype=dtype, out=out,
+            backend=backend, devices=devices,
+        )
+
+    with _LOCK:
+        _MEMO[memo_key] = resolved
+        if measured_now:
+            # the cache state just changed: refresh the non-autotune memo
+            # slot so default dispatches in THIS process see the measured
+            # plan, exactly as a fresh process reading the file would.
+            _MEMO[(key, cache_file, False)] = resolved
+    return resolved

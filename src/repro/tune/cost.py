@@ -1,0 +1,451 @@
+"""Analytic cost model: predict the best dispatch plan for an ATA product.
+
+The model joins the two quantitative assets the repo already owns:
+
+* the **exact flop counters** of `repro.core.reference` (they walk the same
+  floor/ceil recursion as the implementations, so counts are exact for any
+  rectangular shape and cutoff), split here into MXU multiply flops and VPU
+  addition flops, and
+* the **write-traffic model** of `repro.analysis.roofline`
+  (`syrk_write_traffic`: packed vs dual-write vs mirrored output bytes).
+
+Per candidate the prediction is a two-term roofline
+
+    compute_s = mult_flops / (peak · mxu_eff(d_base))
+    memory_s  = (add_bytes + stream_bytes + output_bytes) / hbm_bw
+    predicted = max(compute_s, memory_s)
+
+where ``mxu_eff(d) = d / (d + d_half)`` models the efficiency loss of small
+base matmuls (``d_half`` = tile size at which the matmul engine reaches half
+its peak). This term is what creates the Strassen crossover the paper
+engineers around: each extra recursion level multiplies mult flops by 7/8
+but halves the base dimension, so the analytic argmin lands at a finite
+``n_base`` instead of "recurse forever".
+
+The memory terms: ``stream_bytes`` is the blocked-matmul operand traffic
+``(mult/2)·(1/bn + 1/bk)`` of the *kernel output tile* (the plan's Pallas
+blocks on TPU, XLA's ~256 tiling elsewhere) — the same for the one big
+dense dot and for the recursion's base tiles, which is what makes the
+comparison honest; ``add_bytes`` charges each VPU addition flop
+``add_word_cost`` words (≈1 on TPU where XLA fuses operand combinations
+into the consuming dot's reads; higher on CPU), the Strassen memory
+overhead the paper's Section 3.3 engineers around.
+
+Candidate axes (``candidates``): algorithm (dense-dot vs strassen vs
+winograd vs the ATA recursion), output mode (dense vs packed), recursion
+cutoff ``n_base``, and the Pallas kernel block shapes. The algorithm /
+``n_base`` choice is deliberately **out-invariant** (scored with the dense
+output term) so that ``out='packed'`` and ``out='dense'`` plans of one
+problem always run the identical recursion — packed results stay bitwise
+equal to dense ones regardless of cache state.
+
+``distributed_tiling`` is the planner's distributed branch: the lower
+triangle tiling search that used to live in ``core.distributed
+.choose_tiling`` (which now delegates here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+from repro.core.reference import (
+    classical_gemm_flops,
+    classical_syrk_flops,
+    ata_flops,
+    strassen_tn_flops,
+    strassen_tn_flops_winograd,
+)
+from repro.tune import defaults
+
+__all__ = [
+    "Plan",
+    "Machine",
+    "MACHINES",
+    "machine_for",
+    "predict_seconds",
+    "candidates",
+    "analytic_plan",
+    "default_plan",
+    "distributed_tiling",
+]
+
+_ITEMSIZE = {"float32": 4, "bfloat16": 2, "float16": 2, "float64": 8}
+
+
+# ---------------------------------------------------------------------------
+# the frozen dispatch plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One fully-resolved ATA/gemm dispatch: problem key + every tunable.
+
+    Frozen and JSON-serializable (``to_json``/``from_json``) — this is the
+    value the plan cache stores and the consumers (`core.ata`,
+    `core.strassen`, `core.distributed`, `kernels.ops`) read instead of
+    loose ints. ``algorithm`` semantics: for ``op='ata'``, 'strassen' /
+    'winograd' select the C21 variant of the ATA recursion and 'dense' means
+    one classical TN dot; for ``op='gemm_tn'``, they select the FastStrassen
+    variant.
+    """
+
+    op: str                      # 'ata' | 'gemm_tn'
+    m: int
+    n: int
+    k: int                       # == n for op='ata'
+    batch: int                   # leading batch size (0 = unbatched)
+    dtype: str
+    backend: str                 # jax.default_backend() at planning time
+    out: str                     # 'dense' | 'packed'
+    algorithm: str               # 'dense' | 'strassen' | 'winograd'
+    n_base: int
+    packed_block: int
+    use_kernels: bool            # Pallas base kernels (TPU) vs dot_general
+    syrk_blocks: Tuple[int, int]
+    gemm_blocks: Tuple[int, int, int]
+    devices: int = 1             # distributed branch: task-axis size
+    nb: Optional[int] = None     # distributed stripe count (devices > 1)
+    tile_w: Optional[int] = None  # distributed stripe width (devices > 1)
+    source: str = "analytic"     # 'analytic' | 'measured' | 'cache' | 'default'
+    predicted_s: Optional[float] = None
+    measured_s: Optional[float] = None
+    # seconds of the hardcoded-default dispatch, measured interleaved with
+    # this plan by the autotuner (time_pair) — baseline_s/measured_s is the
+    # drift-resistant speedup-vs-default the tuning run actually observed.
+    baseline_s: Optional[float] = None
+
+    @property
+    def variant(self) -> str:
+        """Strassen variant usable by the recursion ('dense' plans included:
+        the recursion never splits because n_base covers the whole tile)."""
+        return "winograd" if self.algorithm == "winograd" else "strassen"
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["syrk_blocks"] = list(self.syrk_blocks)
+        d["gemm_blocks"] = list(self.gemm_blocks)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Plan":
+        d = dict(d)
+        d["syrk_blocks"] = tuple(d["syrk_blocks"])
+        d["gemm_blocks"] = tuple(d["gemm_blocks"])
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# machine models
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    """Roofline parameters of one backend."""
+
+    name: str
+    peak_flops: float      # matmul peak, flops/s
+    hbm_bw: float          # bytes/s
+    d_half: int            # matmul dim at which efficiency reaches 1/2
+    kernels: bool          # Pallas kernels compile natively (not interpret)
+    add_word_cost: float   # extra HBM words charged per VPU addition flop
+    xla_tile: int = 256    # nominal output tile of the non-Pallas matmul
+
+    def mxu_eff(self, d: int) -> float:
+        d = max(int(d), 1)
+        return d / (d + self.d_half)
+
+
+def _tpu_machine() -> Machine:
+    # join with the dry-run roofline model so both analyses share one v5e
+    # parameterization (PEAK_FLOPS / HBM_BW are defined there).
+    from repro.analysis import roofline
+
+    return Machine("tpu", roofline.PEAK_FLOPS, roofline.HBM_BW, 128, True, 1.0)
+
+
+MACHINES = {
+    "tpu": _tpu_machine,
+    # Container-class CPU: ~100 GFLOP/s effective matmul, ~20 GB/s streams.
+    # Only the *ratios* matter for plan choice; d_half/add_word_cost are
+    # calibrated so the analytic argmin reproduces the measured CPU
+    # crossover (n_base 256-512 on the benchmarked gram shapes).
+    "cpu": lambda: Machine("cpu", 1.0e11, 2.0e10, 48, False, 1.5),
+    # A100-class default for completeness (untuned; autotune refines).
+    "gpu": lambda: Machine("gpu", 1.56e14, 1.6e12, 128, False, 1.0),
+}
+
+
+def machine_for(backend: str) -> Machine:
+    return MACHINES.get(backend, MACHINES["cpu"])()
+
+
+# ---------------------------------------------------------------------------
+# mult/add flop split (exact, mirrors repro.core.reference recursions)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _strassen_mult_flops(m: int, n: int, k: int, n_base: int) -> int:
+    """MXU flops of the TN Strassen recursion (base matmuls only)."""
+    if min(m, n, k) <= n_base:
+        return classical_gemm_flops(m, n, k)
+    mp, np_, kp = m + (m & 1), n + (n & 1), k + (k & 1)
+    return 7 * _strassen_mult_flops(mp // 2, np_ // 2, kp // 2, n_base)
+
+
+@functools.lru_cache(maxsize=None)
+def _ata_mult_flops(m: int, n: int, n_base: int) -> int:
+    """MXU flops of the ATA recursion (classical-syrk base tiles + Strassen
+    leaves; the C11/C22/C21 accumulations are VPU adds, not counted here)."""
+    if min(m, n) <= n_base:
+        return classical_syrk_flops(m, n)
+    mp, np_ = m + (m & 1), n + (n & 1)
+    m2, n2 = mp // 2, np_ // 2
+    return 4 * _ata_mult_flops(m2, n2, n_base) + 2 * _strassen_mult_flops(
+        m2, n2, n2, n_base
+    )
+
+
+def _flop_split(op, algorithm, m, n, k, n_base):
+    """(mult_flops, add_flops) for one candidate — adds = total − mults."""
+    if algorithm == "dense":
+        # one classical TN dot over the whole operand (no recursion)
+        mult = classical_gemm_flops(m, n, k)
+        return mult, 0
+    winograd = algorithm == "winograd"
+    if op == "ata":
+        total = ata_flops(m, n, n_base, winograd=winograd)
+        mult = _ata_mult_flops(m, n, n_base)
+    else:
+        s = strassen_tn_flops_winograd if winograd else strassen_tn_flops
+        total = s(m, n, k, n_base)
+        mult = _strassen_mult_flops(m, n, k, n_base)
+    return mult, max(total - mult, 0)
+
+
+def _output_bytes(op, out, n, k, packed_block, itemsize) -> int:
+    """HBM bytes written for the final output (roofline join point)."""
+    from repro.analysis.roofline import syrk_write_traffic
+
+    if op == "ata":
+        mode = "packed" if out == "packed" else "dual"
+        return syrk_write_traffic(n, packed_block, mode, itemsize)
+    return n * k * itemsize
+
+
+def predict_seconds(
+    op: str,
+    algorithm: str,
+    m: int,
+    n: int,
+    k: int,
+    n_base: int,
+    *,
+    batch: int = 0,
+    dtype: str = "float32",
+    out: str = "dense",
+    packed_block: int = defaults.DEFAULT_PACKED_BLOCK,
+    machine: Optional[Machine] = None,
+    backend: str = "cpu",
+    blocks: Optional[Tuple[int, int]] = None,
+) -> float:
+    """Roofline prediction for one candidate configuration.
+
+    ``blocks``: the (bn, bk) output tile of the base matmul engine — the
+    plan's Pallas blocks when kernels are in play, the backend's nominal
+    XLA tiling otherwise.
+    """
+    mach = machine or machine_for(backend)
+    itemsize = _ITEMSIZE.get(dtype, 4)
+    b = max(batch, 1)
+
+    mult, adds = _flop_split(op, algorithm, m, n, k, n_base)
+    d_base = min(n_base, m, n, k) if algorithm != "dense" else min(m, n, k)
+    compute_s = b * mult / (mach.peak_flops * mach.mxu_eff(d_base))
+
+    # memory: operand streaming of the blocked base matmuls (each output
+    # tile re-reads its operand panels: (mult/2)·(1/bn + 1/bk) words), the
+    # fused-add traffic, and the output writes per the roofline model.
+    bn, bk = blocks or (mach.xla_tile, mach.xla_tile)
+    bn = min(bn, max(d_base, 1))
+    bk = min(bk, max(d_base, 1))
+    stream_bytes = (mult / 2) * (1.0 / bn + 1.0 / bk) * itemsize
+    add_bytes = mach.add_word_cost * adds * itemsize
+    out_bytes = _output_bytes(op, out, n, k, packed_block, itemsize)
+    memory_s = b * (stream_bytes + add_bytes + out_bytes) / mach.hbm_bw
+    return max(compute_s, memory_s)
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration and the analytic argmin
+# ---------------------------------------------------------------------------
+
+
+def _kernel_blocks(machine):
+    """Best feasible (syrk_blocks, gemm_blocks) under the VMEM budget.
+
+    Blocks only move the memory term: minimize output-tile streaming
+    (1/bn [+ 1/bk]), tie-break on the smaller VMEM footprint.
+    """
+    vmem = 12 * 2**20  # leave headroom below the ~16 MB VMEM
+    syrk = [
+        (bm, bn)
+        for bm, bn in defaults.SYRK_BLOCK_CANDIDATES
+        if 2 * bm * bn * 4 + bn * bn * 4 <= vmem
+    ]
+    gemm = [
+        (bm, bn, bk)
+        for bm, bn, bk in defaults.GEMM_BLOCK_CANDIDATES
+        if bm * (bn + bk) * 4 + bn * bk * 4 <= vmem
+    ]
+    syrk = sorted(
+        syrk or [defaults.SYRK_BLOCKS],
+        key=lambda b: (2.0 / b[1], 2 * b[0] * b[1] + b[1] * b[1]),
+    )
+    gemm = sorted(
+        gemm or [defaults.GEMM_BLOCKS],
+        key=lambda b: (1.0 / b[1] + 1.0 / b[2], b[0] * (b[1] + b[2]) + b[1] * b[2]),
+    )
+    return syrk[0], gemm[0]
+
+
+def candidates(
+    op: str,
+    m: int,
+    n: int,
+    k: Optional[int] = None,
+    *,
+    batch: int = 0,
+    dtype: str = "float32",
+    out: str = "dense",
+    backend: str = "cpu",
+    devices: int = 1,
+) -> list:
+    """Enumerate scored candidate Plans, best predicted first.
+
+    Scoring uses ``out='dense'`` for the algorithm/n_base choice (see module
+    docstring: out-invariance keeps packed results bitwise equal to dense),
+    then attaches the requested ``out`` and its write-traffic prediction.
+    """
+    k = n if k is None else k
+    mach = machine_for(backend)
+    syrk_bs, gemm_bs = _kernel_blocks(mach)
+    base_tile = (
+        (syrk_bs[1], syrk_bs[1]) if op == "ata" else (gemm_bs[1], gemm_bs[2])
+    ) if mach.kernels else None
+    nb, tile_w = (None, None)
+    if devices > 1:
+        nb, tile_w = distributed_tiling(n, devices)
+
+    algos = ["dense", "strassen", "winograd"]
+    n_bases = sorted({min(nb_c, max(m, n, k)) for nb_c in defaults.N_BASE_CANDIDATES})
+    scored = []
+    seen_degenerate = False
+    for algo in algos:
+        for n_base in n_bases if algo != "dense" else [defaults.DEFAULT_N_BASE]:
+            if algo != "dense" and min(m, n, k) <= n_base:
+                # recursion bottoms out immediately — all such cutoffs are
+                # the same dispatch; keep one canonical representative.
+                if seen_degenerate:
+                    continue
+                seen_degenerate = True
+            pred = predict_seconds(
+                op, algo, m, n, k, n_base,
+                batch=batch, dtype=dtype, out="dense", machine=mach,
+                blocks=base_tile,
+            )
+            scored.append((pred, algo, n_base))
+    scored.sort(key=lambda s: s[0])
+
+    plans = []
+    for pred, algo, n_base in scored:
+        pred_out = predict_seconds(
+            op, algo, m, n, k, n_base,
+            batch=batch, dtype=dtype, out=out, machine=mach, blocks=base_tile,
+        )
+        plans.append(
+            Plan(
+                op=op, m=m, n=n, k=k, batch=batch, dtype=dtype,
+                backend=backend, out=out, algorithm=algo, n_base=n_base,
+                packed_block=defaults.DEFAULT_PACKED_BLOCK,
+                use_kernels=mach.kernels,
+                syrk_blocks=syrk_bs, gemm_blocks=gemm_bs,
+                devices=devices, nb=nb, tile_w=tile_w,
+                source="analytic", predicted_s=pred_out,
+            )
+        )
+    return plans
+
+
+def analytic_plan(op, m, n, k=None, **kw) -> Plan:
+    """The analytic argmin — what ``repro.tune.plan`` returns on cache miss."""
+    return candidates(op, m, n, k, **kw)[0]
+
+
+def default_plan(
+    op: str,
+    m: int,
+    n: int,
+    k: Optional[int] = None,
+    *,
+    batch: int = 0,
+    dtype: str = "float32",
+    out: str = "dense",
+    backend: str = "cpu",
+    devices: int = 1,
+) -> Plan:
+    """The pre-tune-subsystem hardcoded configuration, as a Plan.
+
+    This is the baseline `bench_tune` measures the planner against, and the
+    fallback consumers use when a caller pins *some* tunables manually.
+    """
+    k = n if k is None else k
+    mach = machine_for(backend)
+    nb, tile_w = (None, None)
+    if devices > 1:
+        nb, tile_w = distributed_tiling(n, devices)
+    return Plan(
+        op=op, m=m, n=n, k=k, batch=batch, dtype=dtype, backend=backend,
+        out=out, algorithm=defaults.DEFAULT_VARIANT,
+        n_base=defaults.DEFAULT_N_BASE,
+        packed_block=defaults.DEFAULT_PACKED_BLOCK,
+        use_kernels=mach.kernels,
+        syrk_blocks=defaults.SYRK_BLOCKS, gemm_blocks=defaults.GEMM_BLOCKS,
+        devices=devices, nb=nb, tile_w=tile_w, source="default",
+    )
+
+
+# ---------------------------------------------------------------------------
+# distributed branch: lower-triangle tile search (ex core.distributed)
+# ---------------------------------------------------------------------------
+
+
+def distributed_tiling(n: int, p: int, target_tiles_per_dev: int = 2):
+    """Pick (nb, w): stripe count and stripe width (multiple of 8) for the
+    block-cyclic lower-triangle schedule of ``ata_tile_parallel``.
+
+    Wants: T = nb(nb+1)/2 ≥ p (enough tasks), small T mod p (balance),
+    w reasonably large (MXU efficiency). Searches a small static range.
+    """
+    nb_min = max(1, math.ceil((math.sqrt(8 * p + 1) - 1) / 2))
+    best = None
+    for nb in range(nb_min, 4 * nb_min + 8):
+        t = nb * (nb + 1) // 2
+        if t < p:
+            continue
+        per = -(-t // p)
+        waste = per * p - t
+        w = -(-n // nb)
+        w = -(-w // 8) * 8  # round width up to sublane multiple
+        score = (waste * w * w, -w)  # minimize wasted flops, prefer wide tiles
+        if best is None or score < best[0]:
+            best = (score, nb, w)
+        if t >= target_tiles_per_dev * p and waste == 0:
+            break
+    _, nb, w = best
+    return nb, w

@@ -1,0 +1,55 @@
+"""The single home of every ATA-stack tunable constant.
+
+Before the tune subsystem these literals were scattered across the repo
+(`DEFAULT_N_BASE` in `core/strassen`, `DEFAULT_BLOCKS` in each Pallas
+kernel, `shampoo_n_base` in `configs/base`, ad-hoc `N_BASE = 256` in every
+benchmark). They now live here, in one dependency-free module, and reach
+the call sites through :func:`repro.tune.plan` — an explicit kwarg at a
+call site is a *manual override*, not a tuning decision.
+
+This module must stay import-light (no jax, no repro imports): it is the
+one `repro.tune` module that low layers (`core`, `kernels`) may import
+without creating a cycle, via the lazy `repro.tune.__init__`.
+"""
+
+from __future__ import annotations
+
+__all__ = [
+    "DEFAULT_N_BASE",
+    "DEFAULT_PACKED_BLOCK",
+    "SYRK_BLOCKS",
+    "GEMM_BLOCKS",
+    "DEFAULT_VARIANT",
+    "N_BASE_CANDIDATES",
+    "SYRK_BLOCK_CANDIDATES",
+    "GEMM_BLOCK_CANDIDATES",
+]
+
+# Recursion cutoff of the Strassen/ATA trace-time recursion. 512 keeps every
+# base-case matmul dimension a multiple of the 128-wide MXU while allowing
+# 3-5 Strassen levels on the gram shapes of the framework (d_model/d_ff up
+# to 33792).
+DEFAULT_N_BASE = 512
+
+# Block size of the packed (SymmetricMatrix) output grid.
+DEFAULT_PACKED_BLOCK = 128
+
+# Pallas syrk kernel blocks (bm, bn): contraction block, output block.
+SYRK_BLOCKS = (512, 256)
+
+# Pallas gemm_tn kernel blocks (bm, bn, bk): contraction, C-row, C-col.
+GEMM_BLOCKS = (512, 256, 256)
+
+# Strassen variant for the off-diagonal products when nothing chose one:
+# 'strassen' is the paper-faithful schedule (7 mults / 18 adds).
+DEFAULT_VARIANT = "strassen"
+
+# Candidate grids swept by the analytic model and the measured autotuner.
+N_BASE_CANDIDATES = (128, 256, 512, 1024)
+SYRK_BLOCK_CANDIDATES = ((256, 128), (512, 128), (512, 256), (1024, 256))
+GEMM_BLOCK_CANDIDATES = (
+    (256, 128, 128),
+    (512, 256, 256),
+    (512, 512, 256),
+    (1024, 256, 256),
+)

@@ -37,6 +37,41 @@ def test_ell_distributed_complete_levels():
     assert ell_distributed(63) == 3
 
 
+def _brute_force_depth(p: int, mode: str) -> int:
+    """Brute-force parallel-level count: BFS-expand the actual task tree
+    until it has ≥ P leaves (exactly what ``build_task_tree`` does) and
+    count the levels — the deepest leaf depth."""
+    leaves = build_task_tree(256, 256, p, mode=mode)
+    return max(t.depth for t in leaves)
+
+
+@pytest.mark.parametrize("mode,ell", [
+    ("distributed", ell_distributed), ("shared", ell_shared),
+])
+def test_ell_tracks_brute_force_tree_depth(mode, ell):
+    """Eq. (5)/(6) vs the brute-force tree depth for every P ≤ 64.
+
+    The paper's closed forms count *complete* levels of the idealized
+    geometric expansion (4·8^k / 2·4^k tasks), while the real BFS tree
+    interleaves ATA and ATB fanouts — so on partial levels the formula may
+    sit one level off the constructed tree (it is deliberately step-wise
+    and non-injective, cf. Fig. 5/6). The invariants that must hold
+    brute-force exactly: agreement within one partial level everywhere,
+    exact agreement on the base cases, and a non-decreasing brute-force
+    depth (more processes can never need fewer levels)."""
+    prev_bf = 0
+    for p in range(1, 65):
+        bf = _brute_force_depth(p, mode)
+        assert abs(ell(p) - bf) <= 1, (mode, p, ell(p), bf)
+        assert bf >= prev_bf, (mode, p)
+        prev_bf = bf
+    # exact on the base cases the formulas special-case
+    assert ell(1) == _brute_force_depth(1, mode) == 0
+    first = 6 if mode == "distributed" else 3
+    for p in range(2, first + 1):
+        assert ell(p) == _brute_force_depth(p, mode) == 1
+
+
 def test_ell_shared_base_cases():
     assert ell_shared(1) == 0
     assert ell_shared(2) == 1
