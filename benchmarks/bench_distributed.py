@@ -6,16 +6,23 @@ single-device classical gram ("1-rank baseline"), including the
 distribute/retrieve cost (device_put of A + full gather of C), which is
 what the paper's shaded areas measure. Also reports the analytic
 latency/bandwidth model of Prop. 4.2 for the same (n, P).
+
+The **packed-retrieval comparison** (smoke-safe: compile-only, no timing
+loop) lowers the dense and packed output modes of ``ata_tile_parallel``
+and ``gram_rowshard`` on an 8-fake-device mesh and records the per-device
+collective bytes from the compiled HLO — the Prop. 4.2 low(C) saving as
+measured collective payload, tracked in ``BENCH_distributed.json``.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import re
 import subprocess
 import sys
 
-from benchmarks.common import emit
+from benchmarks.common import emit, smoke
 from repro.core.task_tree import ell_distributed
 
 _CHILD = r"""
@@ -61,6 +68,74 @@ def _run_child(p: int, d: int, m: int, n: int):
     return float(mt.group(1)), float(mt.group(2))
 
 
+# compile-only child: per-device collective bytes of dense vs packed
+# retrieval (token-templated — the script body contains dict braces).
+_COLLECTIVES_CHILD = r"""
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh, shard_map
+from repro.analysis.hlo import collective_bytes
+from repro.core.distributed import ata_tile_parallel, gram_rowshard
+m, n = @M@, @N@
+mesh = make_mesh((2, 4), ("data", "model"))
+a_abs = jax.ShapeDtypeStruct((m, n), jnp.float32)
+sh = NamedSharding(mesh, P("data", None))
+out = {}
+for mode in ("dense", "packed"):
+    f = jax.jit(
+        lambda a, mode=mode: ata_tile_parallel(
+            a, mesh, task_axis="model", row_axis="data", out=mode),
+        in_shardings=(sh,),
+    )
+    hlo = f.lower(a_abs).compile().as_text()
+    out["tile_" + mode] = collective_bytes(hlo)
+row_abs = jax.ShapeDtypeStruct((m, n), jnp.float32)
+for mode in ("dense", "packed"):
+    out_spec = P(None, None, None) if mode == "packed" else P(None, None)
+    f = jax.jit(shard_map(
+        lambda x, mode=mode: gram_rowshard(x, "data", out=mode),
+        mesh=make_mesh((8,), ("data",)),
+        in_specs=(P("data", None),), out_specs=out_spec))
+    hlo = f.lower(row_abs).compile().as_text()
+    out["rowshard_" + mode] = collective_bytes(hlo)
+print("BYTES " + json.dumps(out))
+"""
+
+
+def _run_collectives_child(p: int, m: int, n: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+    env["PYTHONPATH"] = os.path.abspath("src")
+    script = _COLLECTIVES_CHILD.replace("@M@", str(m)).replace("@N@", str(n))
+    out = subprocess.run(
+        [sys.executable, "-c", script],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    mt = re.search(r"BYTES (\{.*\})", out.stdout)
+    if not mt:
+        raise RuntimeError(f"collectives child failed: {out.stderr[-800:]}")
+    return json.loads(mt.group(1))
+
+
+def run_collectives(m: int = 1024, n: int = 1024):
+    """Packed vs dense retrieval: collective bytes from compiled HLO."""
+    bytes_by = _run_collectives_child(8, m, n)
+    for schedule in ("tile", "rowshard"):
+        dense = sum(bytes_by[f"{schedule}_dense"].values())
+        packed = sum(bytes_by[f"{schedule}_packed"].values())
+        ratio = packed / dense if dense else float("nan")
+        emit(
+            f"collectives_{schedule}_{m}x{n}",
+            0.0,
+            f"dense_bytes={dense} packed_bytes={packed} ratio={ratio:.3f}",
+            shape=(m, n),
+            dense_bytes=dense,
+            packed_bytes=packed,
+            packed_over_dense=round(ratio, 4),
+        )
+
+
 def _prop42(n: int, p: int):
     """Prop. 4.2 analytic latency (messages) and bandwidth (words)."""
     ell = ell_distributed(p)
@@ -72,6 +147,11 @@ def _prop42(n: int, p: int):
 
 
 def run():
+    # packed-vs-dense collective bytes: cheap (compile-only), runs in
+    # --smoke too — this is the CI-tracked Prop. 4.2 retrieval number.
+    run_collectives()
+    if smoke():
+        return
     m, n = 4096, 2048
     base_c, base_t = _run_child(1, 1, m, n)
     emit(f"fig6_atad_P1_{m}x{n}", base_t, f"compute_us={base_c*1e6:.0f} speedup=1.00")

@@ -67,6 +67,13 @@ def main():
     c = ata_tile_parallel(a, mesh, task_axis="model")
     print(f"distributed gram (P={len(jax.devices())}): rel err = "
           f"{float(jnp.abs(c - a.T @ a).max() / jnp.abs(c).max()):.2e}")
+    # packed retrieval (paper Prop. 4.2): the result never leaves low(C)
+    # form — ~half the payload of the dense replicated square
+    s = ata_tile_parallel(a, mesh, task_axis="model", out="packed")
+    ratio = s.nbytes / s.dense_nbytes(s.n)
+    err = float(jnp.abs(s.to_dense() - a.T @ a).max() / jnp.abs(c).max())
+    print(f"packed retrieval: {type(s).__name__} blocks={s.blocks.shape} "
+          f"({ratio:.2f}x dense bytes), rel err = {err:.2e}")
 
 
 if __name__ == "__main__":

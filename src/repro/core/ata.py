@@ -57,7 +57,12 @@ from repro.core.strassen import (
     _rec_winograd,
     resolve_tunables,
 )
-from repro.core.symmetric import SymmetricMatrix, default_block_size, sym_tile
+from repro.core.symmetric import (
+    SymmetricMatrix,
+    default_block_size,
+    sym_tile,
+    write_packed_region,
+)
 from repro.tune.defaults import DEFAULT_PACKED_BLOCK  # re-export
 
 __all__ = ["ata", "ata_batched", "DEFAULT_N_BASE", "DEFAULT_PACKED_BLOCK"]
@@ -175,41 +180,14 @@ def _finalize_dense(node, n):
     return sym_tile(_lower_dense(node, n))
 
 
-def _write_packed_region(buf, arr, r0, c0, bn):
-    """Scatter a dense region at global offset ``(r0, c0)`` into packed
-    ``(..., T, bn, bn)`` block storage, splitting it along the bn grid.
-
-    Pieces falling in strictly-upper blocks (bi < bj) are skipped — they can
-    only come from the intra-tile upper halves of (symmetric) diagonal base
-    tiles that straddle a block boundary, whose content the mirror in
-    ``to_dense`` reconstructs. All offsets are static: each piece is one
-    static-slice ``dynamic_update_slice``.
-    """
-    h, w = arr.shape[-2:]
-    r = r0
-    while r < r0 + h:
-        bi = r // bn
-        r_end = min((bi + 1) * bn, r0 + h)
-        c = c0
-        while c < c0 + w:
-            bj = c // bn
-            c_end = min((bj + 1) * bn, c0 + w)
-            if bi >= bj:
-                t = bi * (bi + 1) // 2 + bj
-                buf = buf.at[
-                    ..., t, r - bi * bn : r_end - bi * bn, c - bj * bn : c_end - bj * bn
-                ].set(arr[..., r - r0 : r_end - r0, c - c0 : c_end - c0])
-            c = c_end
-        r = r_end
-    return buf
-
-
 def _assemble_packed(node, buf, off, bn):
+    # write_packed_region (core.symmetric): each block lands in packed
+    # storage via static-offset updates, strictly-upper pieces skipped.
     if not isinstance(node, _TriNode):
-        return _write_packed_region(buf, node, off, off, bn)
+        return write_packed_region(buf, node, off, off, bn)
     n1 = node.c21.shape[-1]
     buf = _assemble_packed(node.c11, buf, off, bn)
-    buf = _write_packed_region(buf, node.c21, off + n1, off, bn)
+    buf = write_packed_region(buf, node.c21, off + n1, off, bn)
     return _assemble_packed(node.c22, buf, off + n1, bn)
 
 

@@ -10,7 +10,10 @@ jax-native SPMD (see DESIGN.md §2):
 * :func:`gram_rowshard` — A row-sharded (the ``C = Σ_p A_pᵀA_p`` view, i.e.
   the C11 recursion collapsed onto the mesh): local ATA + one ``psum``.
   This is the pure-DP gram used by the Shampoo optimizer for row-sharded
-  gradients.
+  gradients. With ``out='packed'`` the psum payload is the packed
+  ``SymmetricMatrix`` block stack — ``T·bn² ≈ n²/2`` words per reduce
+  instead of the dense ``n²`` (the collective-bytes halving the packed
+  optimizer statistics ride on).
 
 * :func:`ata_tile_parallel` — the ATA-S/ATA-D analogue. C's lower triangle
   is tiled into ``nb(nb+1)/2`` uniform ``w×w`` tiles, assigned contiguously
@@ -21,7 +24,12 @@ jax-native SPMD (see DESIGN.md §2):
   row-sharded — the ATA-D two-level layout) are combined with a single
   ``psum`` **of the packed tile stack** — ``T·w² ≈ n²/2`` words instead of
   the dense ``n²``, reproducing the paper's packed-low(C) retrieval saving
-  (Prop. 4.2) as a collective-bytes saving.
+  (Prop. 4.2) as a collective-bytes saving. Retrieval keeps that form:
+  ``out='packed'`` assembles a :class:`~repro.core.symmetric
+  .SymmetricMatrix` straight from the tile stack (a pure slice when the
+  stripe width matches the packed block grid — no dense buffer anywhere),
+  and the dense mode is just its ``to_dense()`` at the root — the mirrored
+  replicated square the seed materialized unconditionally is now opt-in.
 
 * :func:`gemm_tn_colshard` — the distributed FastStrassen companion:
   ``C = AᵀB`` with B column-sharded; each device owns a disjoint column
@@ -37,18 +45,17 @@ LPT model within the tile-granularity bound.
 
 from __future__ import annotations
 
-import functools
-import math
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.ata import ata
 from repro.core.strassen import strassen_tn
+from repro.core.symmetric import SymmetricMatrix
 
 __all__ = [
     "gram_rowshard",
@@ -72,7 +79,9 @@ def gram_rowshard(
     n_base: Optional[int] = None,
     variant: Optional[str] = None,
     use_ata: Optional[bool] = None,
-) -> jax.Array:
+    out: str = "dense",
+    packed_block: Optional[int] = None,
+) -> Union[jax.Array, SymmetricMatrix]:
     """Per-device gram + all-reduce. Call **inside** shard_map/pjit-manual.
 
     ``a_local`` is this device's row block; the result is the full replicated
@@ -81,17 +90,39 @@ def gram_rowshard(
     through the planner (`repro.tune.plan` on the local shape) unless pinned;
     ``use_ata=False`` — or a plan whose algorithm is ``'dense'`` — falls back
     to the classical one-dot gram.
+
+    ``out='packed'`` keeps the paper's low(C) form **across the psum**: the
+    local gram comes out of ``ata(..., out='packed')`` mirror-free and the
+    all-reduce moves the packed ``(T, bn, bn)`` block stack — ``≈ n²/2``
+    words instead of the dense ``n²`` — returning a replicated
+    :class:`SymmetricMatrix`. (``SymmetricMatrix`` is a pytree, so the
+    caller's ``shard_map`` needs a 3-axis out_spec, e.g. ``P(None, None,
+    None)``.)
     """
+    if out not in ("dense", "packed"):
+        raise ValueError(f"unknown output mode {out!r}; use 'dense' or 'packed'")
     if use_ata is None:
         use_ata = plan is None or plan.algorithm != "dense"
-    local = (
-        ata(a_local, plan=plan, n_base=n_base, variant=variant)
-        if use_ata
-        else jax.lax.dot_general(
+    if use_ata:
+        local = ata(
+            a_local, plan=plan, n_base=n_base, variant=variant,
+            out=out, packed_block=packed_block,
+        )
+    else:
+        local = jax.lax.dot_general(
             a_local, a_local, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
-    )
+        if out == "packed":
+            if packed_block is None:
+                from repro.tune.defaults import DEFAULT_PACKED_BLOCK
+
+                packed_block = (
+                    plan.packed_block if plan is not None else DEFAULT_PACKED_BLOCK
+                )
+            local = SymmetricMatrix.from_dense(local, packed_block)
+    # psum maps over the SymmetricMatrix pytree leaf — the packed stack is
+    # the collective payload, never a mirrored square.
     return jax.lax.psum(local, axis)
 
 
@@ -100,16 +131,26 @@ def gram_rowshard(
 # ---------------------------------------------------------------------------
 
 
-def choose_tiling(n: int, p: int, target_tiles_per_dev: int = 2) -> tuple[int, int]:
+def choose_tiling(
+    n: int,
+    p: int,
+    target_tiles_per_dev: Optional[int] = None,
+    *,
+    out: str = "dense",
+    packed_block: Optional[int] = None,
+) -> tuple[int, int]:
     """Pick (nb, w): nb stripe count, w stripe width (multiple of 8).
 
     Delegates to the planner's distributed branch
     (`repro.tune.cost.distributed_tiling`) — kept as the public name the
-    SPMD schedules and tests use.
+    SPMD schedules and tests use. ``out='packed'`` lets the search snap the
+    stripe width to the packed block grid (pure-slice retrieval).
     """
     from repro.tune.cost import distributed_tiling
 
-    return distributed_tiling(n, p, target_tiles_per_dev)
+    return distributed_tiling(
+        n, p, target_tiles_per_dev, out=out, packed_block=packed_block
+    )
 
 
 def _tri_coords_traced(t):
@@ -133,38 +174,69 @@ def ata_tile_parallel(
     variant: Optional[str] = None,
     use_strassen: bool = True,
     nb: Optional[int] = None,
-    interpret_tiles: bool = False,
-) -> jax.Array:
+    out: str = "dense",
+    packed_block: Optional[int] = None,
+    acc_dtype=jnp.float32,
+) -> Union[jax.Array, SymmetricMatrix]:
     """Distributed ``C = alpha·AᵀA`` with disjoint lower-triangle tile tasks.
 
     Args:
       a: global ``(m, n)``. Sharded ``P(row_axis, None)`` if ``row_axis``
-        is given (m must divide the row_axis size), replicated otherwise.
+        is given (the row_axis size must divide m), replicated otherwise.
       mesh: the device mesh.
       task_axis: mesh axis that owns disjoint C tiles (the "thread pool" of
         ATA-S / the worker ranks of ATA-D).
       row_axis: optional mesh axis across which the contraction dimension is
         sharded (ATA-D's two-level layout). Partial tiles are psum'ed as a
         packed stack (≈ n²/2 words — the paper's low(C) retrieval saving).
+      alpha: scalar applied to the result — in **both** output modes
+        (``out='packed'`` scales the packed blocks; the equivalence
+        ``alpha·packed == pack(alpha·dense)`` holds bitwise).
       plan: :class:`repro.tune.Plan` (its ``nb``/``tile_w`` distributed
         branch supplies the stripe tiling; ``n_base``/``variant`` feed the
-        leaf-level Strassen). Default: the planner front door with
-        ``devices=p_task``.
+        leaf-level Strassen; ``packed_block`` the packed output grid).
+        Default: the planner front door with ``devices=p_task`` and the
+        requested ``out`` — packed plans snap ``tile_w`` to the packed
+        block grid so retrieval is a pure slice.
       nb: stripe count override (default: the plan / :func:`choose_tiling`).
+      out: ``'dense'`` → replicated ``(n, n)`` array, assembled as
+        ``packed.to_dense()`` at the root (one mirror, at the conversion
+        boundary). ``'packed'`` → :class:`SymmetricMatrix` built directly
+        from the psum'd tile stack: no dense ``(n, n)`` buffer, no mirror,
+        no per-tile update loop anywhere in the graph.
+      packed_block: packed output grid block size (default: the plan's, or
+        ``tune.defaults.DEFAULT_PACKED_BLOCK``); clamped per
+        ``symmetric.default_block_size`` for cross-producer compatibility.
+      acc_dtype: accumulation dtype of the leaf products (the dummy-slot
+        zero tiles follow it — derived via ``eval_shape``, never hardcoded).
 
     Returns:
-      Full symmetric ``(n, n)`` C, replicated over the mesh.
+      Full symmetric ``(n, n)`` C replicated over the mesh, or its packed
+      ``SymmetricMatrix`` form.
     """
+    if out not in ("dense", "packed"):
+        raise ValueError(f"unknown output mode {out!r}; use 'dense' or 'packed'")
     m, n = a.shape
     p_task = mesh.shape[task_axis]
+    if row_axis is not None:
+        p_row = mesh.shape[row_axis]
+        if m % p_row:
+            raise ValueError(
+                f"row_axis {row_axis!r} size {p_row} must divide m={m} "
+                f"(A is row-sharded P({row_axis!r}, None))"
+            )
     if plan is None and n_base is None and variant is None and nb is None:
         from repro.tune import plan as _plan_fn
 
-        plan = _plan_fn(op="ata", m=m, n=n, dtype=str(a.dtype), devices=p_task)
+        plan = _plan_fn(
+            op="ata", m=m, n=n, dtype=str(a.dtype), devices=p_task, out=out
+        )
     w = None
     if plan is not None:
         n_base = plan.n_base if n_base is None else n_base
         variant = plan.variant if variant is None else variant
+        if packed_block is None:
+            packed_block = plan.packed_block
         if plan.algorithm == "dense":
             use_strassen = False
         # adopt the plan's stripe tiling only if it was built for THIS
@@ -173,7 +245,7 @@ def ata_tile_parallel(
         if nb is None and plan.devices == p_task and plan.n == n and plan.nb:
             nb, w = plan.nb, plan.tile_w
     if nb is None:
-        nb, w = choose_tiling(n, p_task)
+        nb, w = choose_tiling(n, p_task, out=out, packed_block=packed_block)
     elif w is None:
         w = -(-n // nb)
         w = -(-w // 8) * 8
@@ -184,19 +256,32 @@ def ata_tile_parallel(
     if n_pad > n:
         a = jnp.pad(a, ((0, 0), (0, n_pad - n)))
 
+    def compute_tile(a_local, t):
+        i, j = _tri_coords_traced(t)
+        ai = jax.lax.dynamic_slice_in_dim(a_local, i * w, w, axis=1)
+        aj = jax.lax.dynamic_slice_in_dim(a_local, j * w, w, axis=1)
+        if use_strassen:
+            return strassen_tn(
+                ai, aj, n_base=n_base, variant=variant, acc_dtype=acc_dtype
+            )
+        return jax.lax.dot_general(
+            ai, aj, (((0,), (0,)), ((), ())),
+            preferred_element_type=acc_dtype,
+        )
+
+    # shape/dtype of one computed tile, without tracing a real one: the
+    # dummy-slot zero tile must agree with it exactly, or the two lax.cond
+    # branches fail to trace (e.g. a bf16 accumulation dtype against the
+    # previously hardcoded f32 dummy).
+    m_local = m // mesh.shape[row_axis] if row_axis is not None else m
+    tile_abs = jax.eval_shape(
+        compute_tile,
+        jax.ShapeDtypeStruct((m_local, n_pad), a.dtype),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
     def local_fn(a_local):
         p = jax.lax.axis_index(task_axis)
-
-        def compute_tile(t):
-            i, j = _tri_coords_traced(t)
-            ai = jax.lax.dynamic_slice_in_dim(a_local, i * w, w, axis=1)
-            aj = jax.lax.dynamic_slice_in_dim(a_local, j * w, w, axis=1)
-            if use_strassen:
-                return strassen_tn(ai, aj, n_base=n_base, variant=variant)
-            return jax.lax.dot_general(
-                ai, aj, (((0,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )
 
         def tile_slot(q):
             """Slot q of this device: tile p·t_per+q, or a zero dummy.
@@ -211,11 +296,11 @@ def ata_tile_parallel(
             """
             g = p * t_per + q
             if (p_task - 1) * t_per + q < t_total:
-                return compute_tile(g)
+                return compute_tile(a_local, g)
             return jax.lax.cond(
                 g < t_total,
-                lambda: compute_tile(jnp.minimum(g, t_total - 1)),
-                lambda: jnp.zeros((w, w), jnp.float32),
+                lambda: compute_tile(a_local, jnp.minimum(g, t_total - 1)),
+                lambda: jnp.zeros(tile_abs.shape, tile_abs.dtype),
             )
 
         # python-unrolled tile loop (t_per is small): keeps every tile's
@@ -231,18 +316,18 @@ def ata_tile_parallel(
     tiles = shard_map(
         local_fn, mesh=mesh, in_specs=(in_spec,), out_specs=P(task_axis, None, None)
     )(a)
-    # tiles: global (p_task * t_per, w, w); place tile g (= t for g < T) at
-    # its static (i, j) block position, then mirror the strict lower triangle.
-    c = jnp.zeros((n_pad, n_pad), dtype=tiles.dtype)
-    for t in range(t_total):
-        i = int((math.isqrt(8 * t + 1) - 1) // 2)
-        j = t - i * (i + 1) // 2
-        c = jax.lax.dynamic_update_slice(c, tiles[t], (i * w, j * w))
-    c = c[:n, :n]
-    c = jnp.tril(c) + jnp.tril(c, -1).T
+    # tiles: global (p_task * t_per, w, w), tri-enumerated — exactly the
+    # packed retrieval payload. Assemble the SymmetricMatrix straight from
+    # it (pure slice when w matches the packed grid; static re-tile
+    # otherwise); dense output is its one root-level mirror. The seed's
+    # per-tile dynamic_update_slice loop into a replicated (n_pad, n_pad)
+    # square is gone from both modes.
+    sym = SymmetricMatrix.from_tile_stack(tiles, n, nb=nb, packed_block=packed_block)
     if alpha != 1.0:
-        c = alpha * c
-    return c
+        sym = sym.scale(alpha)
+    if out == "packed":
+        return sym
+    return sym.to_dense()
 
 
 def tile_parallel_device_flops(
@@ -254,6 +339,8 @@ def tile_parallel_device_flops(
     n_base: Optional[int] = None,
     use_strassen: Optional[bool] = None,
     dtype: str = "float32",
+    out: str = "dense",
+    packed_block: Optional[int] = None,
 ) -> list:
     """Exact per-device flops of :func:`ata_tile_parallel`'s masked schedule.
 
@@ -266,20 +353,22 @@ def tile_parallel_device_flops(
     resolve through the same planner front door the execution path
     consults, so the model counts what the default dispatch actually runs
     (pass the operand's ``dtype`` — the plan, and hence the recursion, is
-    keyed on it).
+    keyed on it — and the dispatch's ``out``/``packed_block``: the packed
+    mode's tiling can snap to the packed block grid, changing the stripe
+    width the flop model must mirror).
     """
     from repro.core.reference import classical_gemm_flops, strassen_tn_flops
 
     if n_base is None or use_strassen is None:
         from repro.tune import plan as _plan_fn
 
-        pl = _plan_fn(op="ata", m=m, n=n, dtype=dtype, devices=p)
+        pl = _plan_fn(op="ata", m=m, n=n, dtype=dtype, devices=p, out=out)
         n_base = pl.n_base if n_base is None else n_base
         use_strassen = (
             (pl.algorithm != "dense") if use_strassen is None else use_strassen
         )
     if nb is None:
-        nb, w = choose_tiling(n, p)
+        nb, w = choose_tiling(n, p, out=out, packed_block=packed_block)
     else:
         w = -(-n // nb)
         w = -(-w // 8) * 8
@@ -321,7 +410,22 @@ def gemm_tn_colshard(
         raise ValueError(f"contraction mismatch {a.shape} vs {b.shape}")
     p_task = mesh.shape[task_axis]
     if k % p_task:
-        raise ValueError(f"k={k} must divide task axis {p_task}")
+        # the requirement runs device→columns: every device of the task
+        # axis owns one equal column stripe of C.
+        raise ValueError(
+            f"task axis {task_axis!r} size {p_task} must divide k={k} "
+            f"(B is column-sharded P(..., {task_axis!r}))"
+        )
+    if row_axis is not None:
+        p_row = mesh.shape[row_axis]
+        if m % p_row:
+            # validated here, with the same orientation, instead of letting
+            # shard_map fail opaquely on an indivisible in_spec.
+            raise ValueError(
+                f"row_axis {row_axis!r} size {p_row} must divide the "
+                f"contraction dim m={m} (A and B are row-sharded "
+                f"P({row_axis!r}, ...))"
+            )
     if plan is not None:
         n_base = plan.n_base if n_base is None else n_base
         variant = plan.variant if variant is None else variant

@@ -39,7 +39,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["SymmetricMatrix", "tri_block_indices", "default_block_size", "sym_tile"]
+__all__ = [
+    "SymmetricMatrix",
+    "tri_block_indices",
+    "default_block_size",
+    "sym_tile",
+    "write_packed_region",
+]
 
 
 def sym_tile(x):
@@ -67,6 +73,36 @@ def default_block_size(n: int, bn: int) -> int:
     bn = min(bn, max(8, -(-n // 8) * 8))
     nb = -(-n // bn)
     return max(8, -(-(-(-n // nb)) // 8) * 8)
+
+
+def write_packed_region(buf, arr, r0, c0, bn):
+    """Scatter a dense region at global offset ``(r0, c0)`` into packed
+    ``(..., T, bn, bn)`` block storage, splitting it along the bn grid.
+
+    Pieces falling in strictly-upper blocks (bi < bj) are skipped — they can
+    only come from the intra-tile upper halves of *symmetric* regions that
+    straddle a block boundary (diagonal base tiles of the ATA recursion,
+    diagonal stripe tiles of the distributed schedule), whose content the
+    mirror in ``to_dense`` reconstructs. All offsets are static: each piece
+    is one static-slice ``dynamic_update_slice``.
+    """
+    h, w = arr.shape[-2:]
+    r = r0
+    while r < r0 + h:
+        bi = r // bn
+        r_end = min((bi + 1) * bn, r0 + h)
+        c = c0
+        while c < c0 + w:
+            bj = c // bn
+            c_end = min((bj + 1) * bn, c0 + w)
+            if bi >= bj:
+                t = bi * (bi + 1) // 2 + bj
+                buf = buf.at[
+                    ..., t, r - bi * bn : r_end - bi * bn, c - bj * bn : c_end - bj * bn
+                ].set(arr[..., r - r0 : r_end - r0, c - c0 : c_end - c0])
+            c = c_end
+        r = r_end
+    return buf
 
 
 def tri_block_indices(nb: int):
@@ -172,6 +208,70 @@ class SymmetricMatrix:
         for _ in batch:
             fn = jax.vmap(fn)
         return cls(fn(lower), n, bn)
+
+    @classmethod
+    def from_tile_stack(cls, tiles, n: int, *, nb: int, packed_block=None):
+        """Assemble from a tri-enumerated ``(..., S, w, w)`` lower-triangle
+        tile stack — the SPMD schedules' psum'd payload (paper Prop. 4.2).
+
+        ``tiles`` covers an ``nb``-stripe grid of width ``w =
+        tiles.shape[-1]`` under the same row-major enumeration this storage
+        uses (``t = i(i+1)/2 + j``, ``j ≤ i``); ``S ≥ nb(nb+1)/2`` — trailing
+        entries (SPMD dummy slots of ``ata_tile_parallel``) are ignored, as
+        are stripes that lie entirely in the padding beyond ``n``.
+
+        Two paths:
+
+        * **aligned** (``w`` equals the packed grid's block size): the
+          enumeration is prefix-closed, so the packed blocks *are* the first
+          ``T`` stack entries — a pure slice, no dense buffer, no copy of
+          the off-diagonal payload;
+        * **misaligned**: each stripe tile is re-tiled onto the packed grid
+          with static-offset writes (:func:`write_packed_region`) — still no
+          dense ``(n, n)`` intermediate anywhere.
+
+        Diagonal blocks are symmetrized to the storage contract either way
+        (diagonal *stripe* tiles arrive as raw ``AᵢᵀAᵢ`` dots, which are only
+        approximately symmetric under XLA accumulation order).
+        """
+        w = tiles.shape[-1]
+        t_src = nb * (nb + 1) // 2
+        if tiles.shape[-2] != w:
+            raise ValueError(f"expected square tiles, got {tiles.shape[-2:]}")
+        if tiles.shape[-3] < t_src:
+            raise ValueError(
+                f"stack holds {tiles.shape[-3]} tiles < T={t_src} for nb={nb}"
+            )
+        if nb * w < n:
+            raise ValueError(f"nb={nb} stripes of width {w} do not cover n={n}")
+        if packed_block is None:
+            from repro.tune.defaults import DEFAULT_PACKED_BLOCK
+
+            packed_block = DEFAULT_PACKED_BLOCK
+        bn = default_block_size(n, packed_block)
+        nb_pack = -(-n // bn)
+        t_pack = nb_pack * (nb_pack + 1) // 2
+        if w == bn:
+            # prefix-closed enumeration: stack[:T_pack] IS the packed storage
+            return cls(tiles[..., :t_pack, :, :], n, bn)._symmetrize_diag()
+        # repack: re-tile every stripe tile onto the bn grid
+        n_pad = nb_pack * bn
+        batch = tiles.shape[:-3]
+        buf = jnp.zeros((*batch, t_pack, bn, bn), tiles.dtype)
+        i_idx, j_idx = tri_block_indices(nb)
+        for t in range(t_src):
+            i, j = int(i_idx[t]), int(j_idx[t])
+            r0, c0 = i * w, j * w
+            if r0 >= n_pad or c0 >= n_pad:
+                continue  # stripe entirely in the padding beyond n
+            tile = tiles[..., t, :, :]
+            if i == j:
+                # symmetrize before the scatter so pieces skipped in
+                # strictly-upper packed blocks are mirror-reconstructible
+                tile = sym_tile(tile)
+            h, wd = min(w, n_pad - r0), min(w, n_pad - c0)
+            buf = write_packed_region(buf, tile[..., :h, :wd], r0, c0, bn)
+        return cls(buf, n, bn)._symmetrize_diag()
 
     @classmethod
     def from_dense(cls, dense, bn: int):

@@ -287,7 +287,11 @@ def _gram_artifacts(mesh, *, m=65536, n=16384, n_base=None):
 
       * ``naive``     — classical gram (no Strassen) — the pdsyrk baseline;
       * ``strassen``  — paper-faithful ATA leaves (7-mult recursion);
-      * ``winograd``  — beyond-paper 15-add variant.
+      * ``winograd``  — beyond-paper 15-add variant;
+      * ``strassen_packed`` — packed low(C) retrieval: the result stays a
+        ``SymmetricMatrix`` tile stack end-to-end (Prop. 4.2's saving as
+        collective/output bytes — compare its ``collectives`` and
+        ``output_bytes`` against ``strassen``'s dense replication).
 
     HLO flops show the 2/3-of-Strassen saving directly; collectives show
     the packed-tile retrieval volume (≈ n²/2 words). The planned cutoff
@@ -312,6 +316,9 @@ def _gram_artifacts(mesh, *, m=65536, n=16384, n_base=None):
         ("naive", dict(use_strassen=False)),
         ("strassen", dict(use_strassen=True, variant="strassen")),
         ("winograd", dict(use_strassen=True, variant="winograd")),
+        # packed retrieval (the distributed out='packed' mode)
+        ("strassen_packed", dict(use_strassen=True, variant="strassen",
+                                 out="packed")),
         # §Perf knobs: recursion cutoff (depth ↔ MXU-friendly leaf size)
         # and tile count (Strassen depth ↔ balance)
         (f"strassen_nb{alt}", dict(use_strassen=True, variant="strassen",

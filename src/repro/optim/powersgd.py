@@ -12,8 +12,11 @@ Error feedback keeps the compression unbiased over time: the residual
 ``G − P·Qᵀ`` is added back into the next step's gradient.
 
 Usage: wrap the per-device (pre-all-reduce) gradients; the returned factors
-are what the DP collective reduces. ``compress_tree``/``decompress_tree``
-handle whole pytrees (2-D+ leaves compressed, small leaves passed through).
+are what the DP collective reduces. :func:`compress_sharded` is the
+shard_map-native variant for **row-sharded** gradients: the factor psums
+stay, and the orthonormalization gram crosses the mesh **in packed form**
+(``gram_rowshard(..., out='packed')`` — the paper's low(C) retrieval saving
+applied to the optimizer's collective bytes).
 """
 
 from __future__ import annotations
@@ -26,7 +29,14 @@ import jax.numpy as jnp
 from repro.core.ata import ata
 from repro.core.strassen import strassen_tn
 
-__all__ = ["PowerSGDState", "init_state", "compress", "decompress", "error_feedback"]
+__all__ = [
+    "PowerSGDState",
+    "init_state",
+    "compress",
+    "compress_sharded",
+    "decompress",
+    "error_feedback",
+]
 
 
 class PowerSGDState(NamedTuple):
@@ -40,14 +50,13 @@ def init_state(key, shape, rank: int) -> PowerSGDState:
     return PowerSGDState(q=q, error=jnp.zeros((m, n), jnp.float32))
 
 
-def _orthonormalize(p: jax.Array, eps: float = 1e-6) -> jax.Array:
-    """Whiten columns of p via the ATA gram + Cholesky (p ← p·L⁻ᵀ).
+def _whiten(p: jax.Array, g: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Whiten columns of p given its gram ``g = PᵀP`` (p ← p·L⁻ᵀ).
 
     The ridge scales with trace(g)/r so rank-deficient P (more compression
     rank than gradient rank) stays finite: null-space columns collapse to
     ~eps-scaled noise and contribute nothing to the reconstruction.
     """
-    g = ata(p)                # (r, r) = pᵀp — the paper's op, planner-dispatched
     r = p.shape[1]
     ridge = eps * (jnp.trace(g) / r + 1e-30) + 1e-30
     g = g + ridge * jnp.eye(r, dtype=g.dtype)
@@ -56,6 +65,11 @@ def _orthonormalize(p: jax.Array, eps: float = 1e-6) -> jax.Array:
     return jax.lax.linalg.triangular_solve(
         l, p, left_side=False, lower=True, transpose_a=True
     )
+
+
+def _orthonormalize(p: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # (r, r) = pᵀp — the paper's op, planner-dispatched
+    return _whiten(p, ata(p), eps)
 
 
 def compress(
@@ -73,6 +87,44 @@ def compress(
     q = strassen_tn(g, p, n_base=n_base)                   # GᵀP — TN product
     g_hat = p @ q.T
     return p, q, PowerSGDState(q=q, error=g - g_hat)
+
+
+def compress_sharded(
+    g_local: jax.Array,
+    state: PowerSGDState,
+    axis: str,
+    *,
+    n_base: Optional[int] = None,
+    packed_block: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array, PowerSGDState]:
+    """One PowerSGD round for a **row-sharded** gradient — call inside
+    ``shard_map`` with ``g_local``/``state.error`` holding this device's row
+    block of the global ``(m, n)`` gradient (``state.q`` replicated).
+
+    Exactly the row-shard of :func:`compress` (up to psum reassociation):
+    ``P``'s rows stay sharded like ``G``'s, and the two collectives are
+
+    * the orthonormalization gram ``PᵀP`` — ``gram_rowshard(out='packed')``,
+      so the reduce moves the packed lower-triangular block stack, never a
+      mirrored square (the paper's Prop. 4.2 saving on optimizer bytes);
+    * the ``(n, r)`` factor ``Q = GᵀP`` — a psum over the row shards.
+
+    Returns ``(p_local, q, state)`` with ``p_local`` and ``state.error``
+    row-sharded and ``q`` replicated.
+    """
+    from repro.core.distributed import gram_rowshard
+
+    g_local = g_local.astype(jnp.float32) + state.error
+    p_local = g_local @ state.q                            # rows of P = G·Q
+    gram = gram_rowshard(
+        p_local, axis, n_base=n_base, out="packed", packed_block=packed_block
+    )
+    p_local = _whiten(p_local, gram.to_dense())            # (r, r) densify only
+    q = jax.lax.psum(
+        strassen_tn(g_local, p_local, n_base=n_base), axis  # GᵀP row-shard sum
+    )
+    g_hat_local = p_local @ q.T
+    return p_local, q, PowerSGDState(q=q, error=g_local - g_hat_local)
 
 
 def decompress(p: jax.Array, q: jax.Array) -> jax.Array:

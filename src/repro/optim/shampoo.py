@@ -24,6 +24,17 @@ square is materialized only inside the (every ``update_every`` steps)
 inverse-root refresh. This roughly halves the resident memory of the L/R
 optimizer state (exact ratio ``(k+1)/2k`` for ``k`` packed blocks per side).
 
+The packed form survives **sharding** too: under ZeRO-1 the stat stacks
+shard their leading block-batch dim over the ``data`` mesh axis
+(``train_step.state_specs`` maps the packed 4-D ``(nb, T, bn, bn)`` leaves
+the same way as dense 3-D ones — block ownership, the optimizer-level
+analogue of the paper's disjoint tasks), so whatever GSPMD moves when
+re-laying-out optimizer state is packed-block payload, ≈ half the dense
+bytes. For row-sharded gram accumulation under explicit ``shard_map``, use
+``repro.core.distributed.gram_rowshard(..., out='packed')`` — the psum then
+reduces the packed stack directly (see ``optim.powersgd.compress_sharded``
+for the worked consumer).
+
 Other pieces follow Anil et al.'s distributed Shampoo: coupled-Newton
 inverse p-th roots (p = 4 for 2-D blocks) refreshed every
 ``update_every`` steps under ``lax.cond``, Adam grafting for step size,

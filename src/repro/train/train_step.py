@@ -176,11 +176,19 @@ def state_specs(
         }
     else:  # shampoo: map specs onto its state tree
         def shampoo_leaf_spec(ab):
-            if ab.ndim == 3:  # (nb, b, b) stat/preconditioner stacks
-                spec = P("data", None, None) if (
-                    zero1 and "data" in mesh.shape and ab.shape[0] % mesh.shape["data"] == 0
-                ) else P(None, None, None)
-                return spec
+            # stat/preconditioner stacks lead with the parameter-block batch
+            # dim: (nb, b, b) dense, (nb, T, bn, bn) packed SymmetricMatrix
+            # blocks. Both shard block ownership over 'data'. The packed
+            # (4-D) case used to fall through to fully-replicated — the
+            # dense-replication bug that made ZeRO-1 shampoo state 2× its
+            # packed size again on every device.
+            if ab.ndim in (3, 4):
+                shard = (
+                    zero1 and "data" in mesh.shape
+                    and ab.shape[0] % mesh.shape["data"] == 0
+                )
+                parts = ["data" if shard else None] + [None] * (ab.ndim - 1)
+                return P(*parts)
             return P(*([None] * ab.ndim))
 
         opt_specs = {

@@ -87,8 +87,12 @@ def load_cache(path: Optional[str] = None) -> dict:
     for key, d in raw.get("plans", {}).items():
         try:
             out[key] = cost.Plan.from_json(d)
-        except TypeError:
-            continue  # schema drift: ignore entries a newer Plan can't load
+        except (TypeError, KeyError, ValueError):
+            # schema drift (TypeError), truncated/hand-edited entries
+            # (KeyError on a missing field, ValueError on a non-dict value):
+            # skip the entry; the analytic model covers the key instead of
+            # one bad line crashing every planned dispatch in the process.
+            continue
     return out
 
 

@@ -66,6 +66,7 @@ __all__ = [
     "MACHINES",
     "machine_for",
     "predict_seconds",
+    "retrieval_bytes",
     "candidates",
     "analytic_plan",
     "default_plan",
@@ -238,6 +239,28 @@ def _output_bytes(op, out, n, k, packed_block, itemsize) -> int:
     return n * k * itemsize
 
 
+def retrieval_bytes(
+    out: str,
+    nb: int,
+    tile_w: int,
+    itemsize: int = 4,
+) -> int:
+    """Retrieval payload of the distributed tile schedule, per device.
+
+    Both terms are functions of the padded stripe grid alone.
+    ``out='packed'`` ships the psum'd/gathered tile stack itself —
+    ``T·w² ≈ n²/2`` words (paper Prop. 4.2's low(C) saving as collective
+    bytes). ``out='dense'`` additionally materializes the mirrored
+    ``(nb·w)²`` square on every device — the dense-replication cost the
+    packed mode removes.
+    """
+    t_total = nb * (nb + 1) // 2
+    stack = t_total * tile_w * tile_w * itemsize
+    if out == "packed":
+        return stack
+    return (nb * tile_w) ** 2 * itemsize
+
+
 def predict_seconds(
     op: str,
     algorithm: str,
@@ -253,12 +276,18 @@ def predict_seconds(
     machine: Optional[Machine] = None,
     backend: str = "cpu",
     blocks: Optional[Tuple[int, int]] = None,
+    devices: int = 1,
+    nb: Optional[int] = None,
+    tile_w: Optional[int] = None,
 ) -> float:
     """Roofline prediction for one candidate configuration.
 
     ``blocks``: the (bn, bk) output tile of the base matmul engine — the
     plan's Pallas blocks when kernels are in play, the backend's nominal
-    XLA tiling otherwise.
+    XLA tiling otherwise. With ``devices > 1`` (the planner's distributed
+    branch) the output term becomes the tile schedule's *retrieval* payload
+    (:func:`retrieval_bytes`) — packed tile stack vs replicated dense
+    square — for the ``nb``/``tile_w`` stripe tiling.
     """
     mach = machine or machine_for(backend)
     itemsize = _ITEMSIZE.get(dtype, 4)
@@ -276,7 +305,14 @@ def predict_seconds(
     bk = min(bk, max(d_base, 1))
     stream_bytes = (mult / 2) * (1.0 / bn + 1.0 / bk) * itemsize
     add_bytes = mach.add_word_cost * adds * itemsize
-    out_bytes = _output_bytes(op, out, n, k, packed_block, itemsize)
+    if devices > 1 and op == "ata":
+        if nb is None or tile_w is None:
+            nb, tile_w = distributed_tiling(
+                n, devices, out=out, packed_block=packed_block
+            )
+        out_bytes = retrieval_bytes(out, nb, tile_w, itemsize)
+    else:
+        out_bytes = _output_bytes(op, out, n, k, packed_block, itemsize)
     memory_s = b * (stream_bytes + add_bytes + out_bytes) / mach.hbm_bw
     return max(compute_s, memory_s)
 
@@ -340,7 +376,11 @@ def candidates(
     ) if mach.kernels else None
     nb, tile_w = (None, None)
     if devices > 1:
-        nb, tile_w = distributed_tiling(n, devices)
+        # the requested out feeds the tiling so packed plans snap tile_w
+        # to the packed block grid (pure-slice retrieval, no repack)
+        nb, tile_w = distributed_tiling(
+            n, devices, out=out, packed_block=defaults.DEFAULT_PACKED_BLOCK
+        )
 
     algos = ["dense", "strassen", "winograd"]
     n_bases = sorted({min(nb_c, max(m, n, k)) for nb_c in defaults.N_BASE_CANDIDATES})
@@ -367,6 +407,7 @@ def candidates(
         pred_out = predict_seconds(
             op, algo, m, n, k, n_base,
             batch=batch, dtype=dtype, out=out, machine=mach, blocks=base_tile,
+            devices=devices, nb=nb, tile_w=tile_w,
         )
         plans.append(
             Plan(
@@ -408,7 +449,9 @@ def default_plan(
     mach = machine_for(backend)
     nb, tile_w = (None, None)
     if devices > 1:
-        nb, tile_w = distributed_tiling(n, devices)
+        nb, tile_w = distributed_tiling(
+            n, devices, out=out, packed_block=defaults.DEFAULT_PACKED_BLOCK
+        )
     return Plan(
         op=op, m=m, n=n, k=k, batch=batch, dtype=dtype, backend=backend,
         out=out, algorithm=defaults.DEFAULT_VARIANT,
@@ -425,16 +468,62 @@ def default_plan(
 # ---------------------------------------------------------------------------
 
 
-def distributed_tiling(n: int, p: int, target_tiles_per_dev: int = 2):
+def distributed_tiling(
+    n: int,
+    p: int,
+    target_tiles_per_dev: Optional[int] = None,
+    *,
+    out: str = "dense",
+    packed_block: Optional[int] = None,
+    n_base: Optional[int] = None,
+):
     """Pick (nb, w): stripe count and stripe width (multiple of 8) for the
     block-cyclic lower-triangle schedule of ``ata_tile_parallel``.
 
     Wants: T = nb(nb+1)/2 ≥ p (enough tasks), small T mod p (balance),
     w reasonably large (MXU efficiency). Searches a small static range.
+
+    With ``out='packed'``, stripe widths that **snap to the packed block
+    grid** (``w == symmetric.default_block_size(n, packed_block)``) are
+    preferred, and the exactly-aligned stripe count ``⌈n/bn⌉`` joins the
+    candidate set: an aligned tiling makes the packed retrieval a pure
+    slice of the psum'd tile stack (no repack pass). Two things outrank
+    alignment, in order: **balance** (a misaligned zero-waste tiling beats
+    an aligned one that idles devices) and **leaf Strassen depth** — a
+    candidate whose stripes are wide enough for more recursion levels
+    (``⌈log₂(w/n_base)⌉``, ``n_base`` defaulting to the static cutoff)
+    keeps the 7/8-mult saving that narrow aligned stripes would forfeit,
+    which is worth far more than the repack copy it costs. For
+    ``out='dense'`` both new terms are order-compatible with the
+    historical (waste, −w) search, so dense tilings are unchanged.
     """
+    from repro.core.symmetric import default_block_size
+
+    if target_tiles_per_dev is None:
+        target_tiles_per_dev = defaults.TARGET_TILES_PER_DEVICE
+    if n_base is None:
+        n_base = defaults.DEFAULT_N_BASE
+    bn_pack = None
+    if out == "packed":
+        bn_pack = default_block_size(
+            n, packed_block or defaults.DEFAULT_PACKED_BLOCK
+        )
+
+    def strassen_depth(w: int) -> int:
+        d = 0
+        while w > n_base:
+            w -= w // 2  # ceil-halving, as the recursion splits
+            d += 1
+        return d
+
     nb_min = max(1, math.ceil((math.sqrt(8 * p + 1) - 1) / 2))
+    cand = list(range(nb_min, 4 * nb_min + 8))
+    if bn_pack is not None:
+        nb_aligned = -(-n // bn_pack)
+        if nb_aligned >= nb_min and nb_aligned not in cand:
+            cand.append(nb_aligned)
     best = None
-    for nb in range(nb_min, 4 * nb_min + 8):
+    for nb in cand:
         t = nb * (nb + 1) // 2
         if t < p:
             continue
@@ -442,10 +531,14 @@ def distributed_tiling(n: int, p: int, target_tiles_per_dev: int = 2):
         waste = per * p - t
         w = -(-n // nb)
         w = -(-w // 8) * 8  # round width up to sublane multiple
-        score = (waste * w * w, -w)  # minimize wasted flops, prefer wide tiles
+        # order: balance → leaf Strassen depth → (packed) grid alignment →
+        # width. For out='dense', misaligned ≡ 0 and depth is monotone in
+        # w, so the argmin coincides with the historical (waste·w², −w).
+        misaligned = 1 if (bn_pack is not None and w != bn_pack) else 0
+        score = (waste * w * w, -strassen_depth(w), misaligned, -w)
         if best is None or score < best[0]:
             best = (score, nb, w)
-        if t >= target_tiles_per_dev * p and waste == 0:
+        if t >= target_tiles_per_dev * p and waste == 0 and not misaligned:
             break
     _, nb, w = best
     return nb, w

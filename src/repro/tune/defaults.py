@@ -20,6 +20,7 @@ __all__ = [
     "SYRK_BLOCKS",
     "GEMM_BLOCKS",
     "DEFAULT_VARIANT",
+    "TARGET_TILES_PER_DEVICE",
     "N_BASE_CANDIDATES",
     "SYRK_BLOCK_CANDIDATES",
     "GEMM_BLOCK_CANDIDATES",
@@ -43,6 +44,10 @@ GEMM_BLOCKS = (512, 256, 256)
 # Strassen variant for the off-diagonal products when nothing chose one:
 # 'strassen' is the paper-faithful schedule (7 mults / 18 adds).
 DEFAULT_VARIANT = "strassen"
+
+# Distributed tile schedule: how many lower-triangle tiles the tiling
+# search aims to give each device of the task axis (balance ↔ tile width).
+TARGET_TILES_PER_DEVICE = 2
 
 # Candidate grids swept by the analytic model and the measured autotuner.
 N_BASE_CANDIDATES = (128, 256, 512, 1024)

@@ -50,6 +50,104 @@ def test_tile_parallel_single_device():
     np.testing.assert_array_equal(np.asarray(c), np.asarray(c).T)
 
 
+def test_tile_parallel_packed_single_device():
+    """out='packed' returns a SymmetricMatrix whose to_dense() is bitwise
+    the dense schedule's output (dense IS packed.to_dense() at the root)."""
+    from repro.core.symmetric import SymmetricMatrix
+
+    mesh = jax.make_mesh((1,), ("model",))
+    r = np.random.default_rng(0)
+    a = jnp.asarray(r.standard_normal((96, 80)), dtype=jnp.float32)
+    c = ata_tile_parallel(a, mesh, task_axis="model", n_base=32)
+    s = ata_tile_parallel(a, mesh, task_axis="model", n_base=32, out="packed")
+    assert isinstance(s, SymmetricMatrix)
+    np.testing.assert_array_equal(np.asarray(s.to_dense()), np.asarray(c))
+    # alpha applies to the packed output too (documented contract)
+    s2 = ata_tile_parallel(
+        a, mesh, task_axis="model", n_base=32, out="packed", alpha=0.5
+    )
+    np.testing.assert_array_equal(
+        np.asarray(s2.blocks), np.asarray(0.5 * s.blocks)
+    )
+
+
+def _walk_eqns(jaxpr):
+    """Yield every eqn including those of nested (shard_map/cond) jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            sub = getattr(v, "jaxpr", None)
+            if sub is not None:
+                yield from _walk_eqns(sub)
+            elif isinstance(v, (list, tuple)):
+                for x in v:
+                    s = getattr(x, "jaxpr", None)
+                    if s is not None:
+                        yield from _walk_eqns(s)
+
+
+def test_tile_parallel_packed_no_dense_intermediate():
+    """The packed path's jaxpr must not materialize any dense (n, n) or
+    (n_pad, n_pad) square — the whole point of packed retrieval."""
+    mesh = jax.make_mesh((1,), ("model",))
+    n = 256  # aligned: w == packed bn == 128 → pure-slice retrieval
+    a_abs = jax.ShapeDtypeStruct((128, n), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda a: ata_tile_parallel(
+            a, mesh, task_axis="model", n_base=64, nb=2, out="packed"
+        )
+    )(a_abs)
+    for eqn in _walk_eqns(jaxpr.jaxpr):
+        for v in eqn.outvars:
+            shape = tuple(getattr(v.aval, "shape", ()))
+            assert shape[-2:] != (n, n), (
+                f"dense square {shape} materialized by {eqn.primitive}"
+            )
+
+
+class _StubMesh:
+    """mesh.shape stand-in: the divisibility validations read only the axis
+    sizes, which lets the >1-device error paths run on a 1-device host."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_tile_parallel_row_axis_must_divide_m():
+    """row_axis sharding of m is validated up front (not an opaque
+    shard_map failure): the row_axis size must divide m."""
+    mesh = _StubMesh({"data": 2, "model": 1})
+    with pytest.raises(ValueError, match=r"row_axis 'data' size 2 must divide m=97"):
+        ata_tile_parallel(
+            jnp.zeros((97, 64), jnp.float32), mesh,
+            task_axis="model", row_axis="data", n_base=32, nb=2,
+        )
+
+
+def test_colshard_divisibility_messages():
+    """Regression: the k % p_task check used to raise the inverted message
+    'k={k} must divide task axis {p}'; the requirement runs the other way —
+    the task axis size must divide k. row_axis divisibility of m is now
+    validated the same way instead of failing opaquely inside shard_map."""
+    from repro.core.distributed import gemm_tn_colshard
+
+    mesh = _StubMesh({"data": 2, "model": 3})
+    a = jnp.zeros((64, 32), jnp.float32)
+    with pytest.raises(
+        ValueError, match=r"task axis 'model' size 3 must divide k=16"
+    ):
+        gemm_tn_colshard(a, jnp.zeros((64, 16), jnp.float32), mesh,
+                         task_axis="model")
+    with pytest.raises(
+        ValueError, match=r"row_axis 'data' size 2 must divide the contraction dim m=63"
+    ):
+        gemm_tn_colshard(
+            jnp.zeros((63, 32), jnp.float32),
+            jnp.zeros((63, 9), jnp.float32),
+            mesh, task_axis="model", row_axis="data",
+        )
+
+
 def test_choose_tiling_properties():
     for n in [256, 1000, 4096]:
         for p in [1, 2, 4, 8, 16]:
@@ -207,11 +305,140 @@ print("OK")
 """
 
 
+TILE_PACKED_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.distributed import ata_tile_parallel
+from repro.core.symmetric import SymmetricMatrix
+from repro.core.reference import syrk_ref
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((8,), ("model",))
+r = np.random.default_rng(5)
+a = jnp.asarray(r.standard_normal((256, 192)), dtype=jnp.float32)
+# nb=4 -> T=10 over 8 devices: T % p != 0 (dummy cond slots) AND w=48 is
+# misaligned with the packed bn=96 grid -> the repack path.
+for nb in (None, 4):
+    dense = jax.jit(lambda a, nb=nb: ata_tile_parallel(
+        a, mesh, task_axis="model", n_base=32, nb=nb))(a)
+    packed = jax.jit(lambda a, nb=nb: ata_tile_parallel(
+        a, mesh, task_axis="model", n_base=32, nb=nb, out="packed"))(a)
+    assert isinstance(packed, SymmetricMatrix), type(packed)
+    # bitwise parity with the dense schedule on the same tiling
+    assert (np.asarray(packed.to_dense()) == np.asarray(dense)).all(), nb
+    # and correctness vs the sequential reference
+    ref = np.asarray(syrk_ref(a))
+    np.testing.assert_allclose(np.asarray(dense), ref, rtol=1e-4, atol=1e-4)
+print("OK")
+"""
+
+TILE_2D_PACKED_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.distributed import ata_tile_parallel
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+r = np.random.default_rng(6)
+a = jnp.asarray(r.standard_normal((128, 160)), dtype=jnp.float32)
+a = jax.device_put(a, NamedSharding(mesh, P("data", None)))
+f_dense = jax.jit(lambda a: ata_tile_parallel(
+    a, mesh, task_axis="model", row_axis="data", n_base=32))
+f_packed = jax.jit(lambda a: ata_tile_parallel(
+    a, mesh, task_axis="model", row_axis="data", n_base=32, out="packed"))
+dense, packed = f_dense(a), f_packed(a)
+assert (np.asarray(packed.to_dense()) == np.asarray(dense)).all()
+np.testing.assert_allclose(np.asarray(dense), np.asarray(a.T @ a),
+                           rtol=1e-4, atol=1e-4)
+print("OK")
+"""
+
+ROWSHARD_PACKED_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import shard_map
+from repro.core.distributed import gram_rowshard
+from repro.analysis.hlo import collective_bytes
+mesh = jax.make_mesh((8,), ("data",))
+r = np.random.default_rng(7)
+a = jnp.asarray(r.standard_normal((512, 96)), dtype=jnp.float32)
+fd = jax.jit(shard_map(
+    lambda x: gram_rowshard(x, "data", n_base=32),
+    mesh=mesh, in_specs=(P("data", None),), out_specs=P(None, None)))
+# packed_block=24 -> a 4x4 packed grid (T=10 of 16 blocks): the psum moves
+# T*bn^2 = 0.625*n^2 words; n=96 with the default 128-block would be a
+# single block (no saving to observe)
+fp = jax.jit(shard_map(
+    lambda x: gram_rowshard(x, "data", n_base=32, out="packed",
+                            packed_block=24),
+    mesh=mesh, in_specs=(P("data", None),), out_specs=P(None, None, None)))
+dense, packed = fd(a), fp(a)
+np.testing.assert_allclose(np.asarray(packed.to_dense()), np.asarray(dense),
+                           rtol=1e-5, atol=1e-5)
+np.testing.assert_allclose(np.asarray(dense), np.asarray(a.T @ a),
+                           rtol=1e-4, atol=1e-4)
+# the psum payload is the packed stack: T/nb^2 = 10/16 of the dense bytes
+bd = sum(collective_bytes(fd.lower(a).compile().as_text()).values())
+bp = sum(collective_bytes(fp.lower(a).compile().as_text()).values())
+assert 0 < bp < 0.7 * bd, (bp, bd)
+print("OK")
+"""
+
+TILE_BF16_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.distributed import ata_tile_parallel
+mesh = jax.make_mesh((8,), ("model",))
+r = np.random.default_rng(8)
+a = jnp.asarray(r.standard_normal((128, 192)), dtype=jnp.bfloat16)
+# nb=4 -> dummy cond slots on trailing devices; with a bf16 accumulation
+# dtype the seed's hardcoded f32 zero tile made the cond branches disagree
+# on dtype and fail to trace (regression for the eval_shape-derived dummy).
+c = jax.jit(lambda a: ata_tile_parallel(
+    a, mesh, task_axis="model", n_base=32, nb=4,
+    acc_dtype=jnp.bfloat16))(a)
+assert c.dtype == jnp.bfloat16, c.dtype
+ref = np.asarray(a, np.float32).T @ np.asarray(a, np.float32)
+np.testing.assert_allclose(np.asarray(c, np.float32), ref,
+                           rtol=0.1, atol=2.0)
+print("OK")
+"""
+
+POWERSGD_SHARDED_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import shard_map
+from repro.optim import powersgd
+mesh = jax.make_mesh((8,), ("data",))
+r = np.random.default_rng(9)
+m, n, rank = 256, 96, 8
+g = jnp.asarray(r.standard_normal((m, n)), dtype=jnp.float32)
+state = powersgd.init_state(jax.random.key(0), (m, n), rank)
+# reference: single-device compress
+p_ref, q_ref, st_ref = powersgd.compress(g, state, n_base=32)
+# sharded: row-sharded g/error, packed-psum gram, psum'd Q factor
+def sharded(g, err, q):
+    st = powersgd.PowerSGDState(q=q, error=err)
+    p_l, q_new, st_new = powersgd.compress_sharded(g, st, "data", n_base=32)
+    return p_l, q_new, st_new.error
+f = jax.jit(shard_map(
+    sharded, mesh=mesh,
+    in_specs=(P("data", None), P("data", None), P(None, None)),
+    out_specs=(P("data", None), P(None, None), P("data", None))))
+p_sh, q_sh, err_sh = f(g, state.error, state.q)
+np.testing.assert_allclose(np.asarray(p_sh), np.asarray(p_ref),
+                           rtol=2e-4, atol=2e-4)
+np.testing.assert_allclose(np.asarray(q_sh), np.asarray(q_ref),
+                           rtol=2e-4, atol=2e-4)
+np.testing.assert_allclose(np.asarray(err_sh), np.asarray(st_ref.error),
+                           rtol=2e-4, atol=2e-4)
+print("OK")
+"""
+
+
 @pytest.mark.parametrize(
     "script",
     [TILE_SCRIPT, TILE_2D_SCRIPT, ROWSHARD_SCRIPT, COLSHARD_SCRIPT,
-     TILE_RAGGED_SCRIPT],
-    ids=["tile_8dev", "tile_2d", "rowshard", "colshard", "tile_ragged"],
+     TILE_RAGGED_SCRIPT, TILE_PACKED_SCRIPT, TILE_2D_PACKED_SCRIPT,
+     ROWSHARD_PACKED_SCRIPT, TILE_BF16_SCRIPT, POWERSGD_SHARDED_SCRIPT],
+    ids=["tile_8dev", "tile_2d", "rowshard", "colshard", "tile_ragged",
+         "tile_packed", "tile_2d_packed", "rowshard_packed", "tile_bf16",
+         "powersgd_sharded"],
 )
 def test_multidevice(script):
     _run_in_subprocess(script)

@@ -156,6 +156,44 @@ def test_shampoo_blocked_partitioning_roundtrip():
 # --- PowerSGD ---------------------------------------------------------------
 
 
+def test_shampoo_packed_state_specs_shard_blocks_over_data():
+    """Regression (ZeRO-1 dense-replication bug): the packed SymmetricMatrix
+    stat stacks are 4-D (nb, T, bn, bn) and used to fall through
+    state_specs' 3-D-only rule to fully-replicated — doubling per-device
+    optimizer-state bytes back to dense scale. They must shard their
+    leading block-ownership dim over 'data' exactly like dense stacks."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import make_mesh
+    from repro.configs.base import SHAPES, OptimizerConfig, RunConfig
+    from repro.configs.registry import get_smoke
+    from repro.models.transformer import init
+    from repro.optim import build as build_opt
+    from repro.train.train_step import state_specs
+
+    cfg = get_smoke("qwen1.5-0.5b")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    run = RunConfig(
+        model=cfg, shape=SHAPES["train_4k"],
+        optimizer=OptimizerConfig(name="shampoo", zero1=True),
+    )
+    opt = build_opt(run.optimizer, 100)
+    params_abs = jax.eval_shape(
+        lambda: init(jax.random.key(0), cfg, mesh=mesh)
+    )
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    specs = state_specs(cfg, mesh, run, params_abs, opt_abs)
+    sh_specs = jax.tree.leaves(
+        specs["opt"]["shampoo"], is_leaf=lambda x: isinstance(x, P)
+    )
+    four_d = [s for s in sh_specs if isinstance(s, P) and len(s) == 4]
+    assert four_d, "no packed (4-D) stat-stack specs found"
+    assert all(s[0] == "data" and s[1:] == (None, None, None) for s in four_d)
+    # dense 3-D stacks (pl/pr preconditioners) keep their block sharding too
+    three_d = [s for s in sh_specs if isinstance(s, P) and len(s) == 3]
+    assert three_d and all(s[0] == "data" for s in three_d)
+
+
 def test_powersgd_rank_sufficient_exact():
     """If rank ≥ rank(G), compression is (nearly) lossless after one step."""
     r = np.random.default_rng(5)

@@ -132,6 +132,35 @@ def test_corrupt_cache_file_falls_back_to_analytic(tmp_path):
     assert p.source == "analytic"
 
 
+def test_corrupt_cache_entries_are_skipped_not_fatal(tmp_path):
+    """Regression: a hand-edited or truncated *entry* (KeyError on a missing
+    field, ValueError on a non-dict value, TypeError on schema drift) must
+    be skipped by load_cache, not crash every planned dispatch."""
+    path = str(tmp_path / "edited.json")
+    good = dataclasses.replace(
+        tune.plan(op="ata", m=640, n=320), source="measured"
+    )
+    key_good = plan_key("ata", 640, 320, 320, 0, "float32", "dense", good.backend)
+    payload = {
+        "schema": "v1",
+        "plans": {
+            key_good: good.to_json(),
+            "k_truncated": {"op": "ata", "m": 1, "n": 1},       # KeyError
+            "k_not_a_dict": "garbage string entry",             # ValueError
+            "k_schema_drift": dict(good.to_json(), bogus=1),    # TypeError
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    loaded = load_cache(path)
+    assert set(loaded) == {key_good}
+    assert loaded[key_good] == good
+    # and the front door serves the surviving measured entry
+    tune.cache.clear_memo()
+    served = tune.plan(op="ata", m=640, n=320, cache_file=path)
+    assert served.source == "cache"
+
+
 # --- autotune ---------------------------------------------------------------
 
 
@@ -195,6 +224,71 @@ def test_autotune_distributed_stays_analytic(tmp_path):
     assert p.source == "analytic"
     assert p.nb is not None and p.tile_w is not None
     assert tune.cache.load_cache(path) == {}
+
+
+# --- distributed branch: retrieval bytes + packed-aligned tiling ------------
+
+
+def test_distributed_tiling_dense_behavior_unchanged():
+    """out='dense' must reproduce the historical search exactly (the
+    alignment term is constant there) — guards plan stability."""
+    for n in [256, 1000, 4096]:
+        for p in [1, 2, 4, 8, 16]:
+            assert cost.distributed_tiling(n, p) == cost.distributed_tiling(
+                n, p, out="dense"
+            )
+
+
+def test_distributed_tiling_packed_snaps_when_balanced():
+    """When the packed-grid-aligned stripe count is as balanced as the best
+    candidate, packed mode must pick it (pure-slice retrieval)."""
+    from repro.core.symmetric import default_block_size
+
+    # n=1024, p=4: nb=8 (w == bn == 128) has waste 0 → aligned must win
+    nb, w = cost.distributed_tiling(1024, 4, out="packed")
+    assert w == default_block_size(1024, defaults.DEFAULT_PACKED_BLOCK)
+    assert nb * w >= 1024 and w % 8 == 0
+    # balance still dominates: a misaligned zero-waste tiling beats an
+    # aligned one that idles devices (n=512, p=8: aligned T=10 < 2 tiles/dev)
+    nb2, w2 = cost.distributed_tiling(512, 8, out="packed")
+    t2 = nb2 * (nb2 + 1) // 2
+    assert -(-t2 // 8) * 8 - t2 == 0  # zero waste kept
+
+
+def test_distributed_tiling_packed_never_forfeits_strassen_depth():
+    """Alignment must not shrink stripes below the leaf Strassen cutoff
+    when a balanced wide tiling exists: at n=4096 the dense search keeps
+    w > DEFAULT_N_BASE (one recursion level per tile) and packed mode must
+    keep the same depth rather than snapping to 128-wide dots."""
+    for p in (1, 4):
+        nbd, wd = cost.distributed_tiling(4096, p, out="dense")
+        nbp, wp = cost.distributed_tiling(4096, p, out="packed")
+        assert wd > defaults.DEFAULT_N_BASE
+        assert wp > defaults.DEFAULT_N_BASE, (p, nbp, wp)
+        assert (nbp, wp) == (nbd, wd)
+
+
+def test_distributed_retrieval_bytes_packed_halves_dense():
+    for n, p in [(1024, 4), (2048, 8), (512, 8)]:
+        for out in ("dense", "packed"):
+            nb, w = cost.distributed_tiling(n, p, out=out)
+            t = nb * (nb + 1) // 2
+            rb = cost.retrieval_bytes(out, nb, w)
+            if out == "packed":
+                assert rb == t * w * w * 4
+                assert rb < 0.75 * (nb * w) ** 2 * 4  # ≈ half the square
+            else:
+                assert rb == (nb * w) ** 2 * 4
+
+
+def test_distributed_plan_prediction_reflects_out_mode():
+    """The distributed plan's predicted seconds must price packed retrieval
+    below dense replication (same algorithm either way: out-invariance)."""
+    pd = tune.plan(op="ata", m=4096, n=2048, devices=8, out="dense")
+    pp = tune.plan(op="ata", m=4096, n=2048, devices=8, out="packed")
+    assert (pd.algorithm, pd.n_base) == (pp.algorithm, pp.n_base)
+    assert pd.nb is not None and pp.nb is not None
+    assert pp.predicted_s <= pd.predicted_s
 
 
 # --- consumers honor the plan ----------------------------------------------
