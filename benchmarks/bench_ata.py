@@ -2,11 +2,17 @@
 
 Compares ``repro.core.ata`` (Strassen-based, 2/3·T_S flops) against the
 XLA-native classical ``AᵀA`` on square and tall matrices of growing size,
-in both output modes:
+in three flavours:
 
-  * ``dense``  — full square, one root mirror;
+  * ``dense``  — full square, one root mirror, dispatched exactly as the
+    planner says (the plan's ``leaf_dispatch`` included);
   * ``packed`` — mirror-free ``SymmetricMatrix`` output (the storage half of
-    the paper's symmetry claim). Must be at parity or faster than dense.
+    the paper's symmetry claim). Must be at parity or faster than dense;
+  * ``batched`` — the recursion with **batched leaf dispatch** against the
+    same recursion unrolled, on one recursion-forcing plan per shape: the
+    level-synchronous formulation's whole point is to stop losing the
+    paper's flop saving to per-leaf dispatch overhead, so this row records
+    the Strassen-vs-dot speedup both ways.
 
 Derived column: effective GFLOPs (Eq. 9 with the actual m·n² shape, r=1)
 for each path, the measured speedups, and the analytic flop ratio at that
@@ -15,11 +21,20 @@ size/cutoff.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import effective_gflops, emit, smoke, time_fn, time_pair
+from benchmarks.common import (
+    batched_recursion_plan,
+    effective_gflops,
+    emit,
+    smoke,
+    time_fn,
+    time_pair,
+)
 from repro import tune
 from repro.core import ata
 from repro.core.reference import ata_flops, classical_syrk_flops
@@ -60,6 +75,7 @@ def run():
             ref_seconds=t_ref,
             n_base=plan.n_base,
             algorithm=plan.algorithm,
+            leaf_dispatch=plan.leaf_dispatch,
         )
         emit(
             f"fig3_ata_packed_{m}x{n}",
@@ -72,6 +88,30 @@ def run():
             mode="packed",
             dense_seconds=t_ata,
             packed_vs_dense_speedup=round(t_ata / t_packed, 4),
+        )
+
+        # leaf-dispatch comparison: the SAME recursion, unrolled vs batched,
+        # interleaved (the ratio is the claim; see tune.search.time_pair).
+        plan_b = batched_recursion_plan("ata", m, n, backend=plan.backend)
+        plan_u = dataclasses.replace(plan_b, leaf_dispatch="unrolled")
+        f_unr = jax.jit(lambda a: ata(a, plan=plan_u))
+        f_bat = jax.jit(lambda a: ata(a, plan=plan_b))
+        t_unr, t_bat = time_pair(f_unr, f_bat, a)
+        emit(
+            f"fig3_ata_batched_{m}x{n}",
+            t_bat,
+            f"eff_gflops={effective_gflops(m, n, t_bat):.2f} "
+            f"speedup={t_ref / t_bat:.3f} unrolled_speedup={t_ref / t_unr:.3f} "
+            f"batched_vs_unrolled={t_unr / t_bat:.3f} n_base={plan_u.n_base}",
+            shape=(m, n),
+            gflops=effective_gflops(m, n, t_bat),
+            mode="dense",
+            ref_seconds=t_ref,
+            unrolled_seconds=t_unr,
+            batched_vs_unrolled=round(t_unr / t_bat, 4),
+            n_base=plan_u.n_base,
+            algorithm=plan_u.algorithm,
+            leaf_dispatch="batched",
         )
 
 

@@ -6,6 +6,12 @@ The paper's pre-allocation lesson (Section 3.3) maps to trace-time
 recursion + XLA buffer reuse, so there is no separate "naive allocation"
 curve — its analogue (per-call retrace/realloc, `no_jit`) is reported to
 show the same effect.
+
+The ``fig4_strassen_batched_*`` rows run the SAME planned recursion with
+``leaf_dispatch='batched'`` (all 7^L leaves in one batched TN dot) against
+the unrolled form, interleaved — the dispatch-overhead claim of the
+batched-leaf PR: the recursion's speedup-vs-dot must come from flops, not
+be eaten by per-leaf launches.
 """
 
 from __future__ import annotations
@@ -16,7 +22,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import effective_gflops, emit, smoke, time_fn
+from benchmarks.common import (
+    batched_recursion_plan,
+    effective_gflops,
+    emit,
+    smoke,
+    time_fn,
+    time_pair,
+)
 from repro import tune
 from repro.core import strassen_tn
 from repro.core.reference import classical_gemm_flops, strassen_tn_flops
@@ -36,9 +49,19 @@ def run():
         plan = tune.plan(op="gemm_tn", m=m, n=n, k=k)
         if plan.algorithm == "dense":  # figure needs the recursion itself
             plan = dataclasses.replace(plan, algorithm="strassen")
+        plan = dataclasses.replace(plan, leaf_dispatch="unrolled")
         plan_wg = dataclasses.replace(plan, algorithm="winograd")
+        # the batched row runs the planner's best batched recursive
+        # candidate (its argmin may be the plain dense dot); the unrolled
+        # twin flips only leaf_dispatch so their ratio isolates dispatch.
+        plan_bat = batched_recursion_plan(
+            "gemm_tn", m, n, k, backend=plan.backend
+        )
+        plan_ubat = dataclasses.replace(plan_bat, leaf_dispatch="unrolled")
         f_st = jax.jit(lambda a, b: strassen_tn(a, b, plan=plan))
         f_wg = jax.jit(lambda a, b: strassen_tn(a, b, plan=plan_wg))
+        f_bat = jax.jit(lambda a, b: strassen_tn(a, b, plan=plan_bat))
+        f_ubat = jax.jit(lambda a, b: strassen_tn(a, b, plan=plan_ubat))
         f_ref = jax.jit(
             lambda a, b: jax.lax.dot_general(
                 a, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
@@ -59,6 +82,25 @@ def run():
             f"flop_ratio={ratio:.3f}",
             shape=(m, n, k),
             gflops=effective_gflops(m, n, t_st, r=2, k=k),
+            n_base=plan.n_base,
+            leaf_dispatch="unrolled",
+        )
+        # batched vs unrolled leaf dispatch of the identical plan,
+        # interleaved (their ratio is the claim under test)
+        t_unr, t_bat = time_pair(f_ubat, f_bat, a, b)
+        emit(
+            f"fig4_strassen_batched_{m}x{n}x{k}",
+            t_bat,
+            f"eff_gflops={effective_gflops(m, n, t_bat, r=2, k=k):.2f} "
+            f"speedup={t_ref/t_bat:.3f} unrolled_speedup={t_ref/t_unr:.3f} "
+            f"batched_vs_unrolled={t_unr/t_bat:.3f} n_base={plan_bat.n_base}",
+            shape=(m, n, k),
+            gflops=effective_gflops(m, n, t_bat, r=2, k=k),
+            ref_seconds=t_ref,
+            unrolled_seconds=t_unr,
+            batched_vs_unrolled=round(t_unr / t_bat, 4),
+            n_base=plan_bat.n_base,
+            leaf_dispatch="batched",
         )
 
 

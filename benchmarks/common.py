@@ -3,7 +3,13 @@ and machine-readable row collection (``BENCH_*.json``, written by ``run.py``).
 
 The warmup/median timing discipline itself lives in
 ``repro.tune.search`` — one implementation shared by the measured
-autotuner and every benchmark, re-exported here unchanged."""
+autotuner and every benchmark, re-exported here unchanged.
+
+Every emitted row carries structured **backend metadata**
+(:func:`backend_meta`: ``backend``/``device_kind``/``jax_version``/
+``interpret``) so BENCH_*.json trajectories are comparable across machines
+— previously "interpret=True" was buried in free-text ``derived`` strings.
+"""
 
 from __future__ import annotations
 
@@ -16,6 +22,8 @@ __all__ = [
     "time_fn",
     "time_pair",
     "effective_gflops",
+    "backend_meta",
+    "batched_recursion_plan",
     "emit",
     "drain_rows",
     "smoke",
@@ -30,9 +38,64 @@ _ROWS: list = []
 # sweeps and iteration counts to CI scale.
 SMOKE = False
 
+_META: dict | None = None
+
 
 def smoke() -> bool:
     return SMOKE or os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def backend_meta() -> dict:
+    """Structured runtime identity stamped on every BENCH row.
+
+    ``backend``: ``jax.default_backend()``; ``device_kind``: the first
+    device's hardware name; ``jax_version``: the runtime (it is part of the
+    plan-cache key for the same reason); ``interpret``: whether the Pallas
+    kernels run in interpret mode here (``kernels.ops.interpret_default``)
+    — kernel-path numbers from an interpret-mode machine are correctness
+    signals, not performance signals, and now say so machine-readably.
+    """
+    global _META
+    if _META is None:
+        import jax
+
+        from repro.kernels.ops import interpret_default
+
+        dev = jax.devices()[0]
+        _META = {
+            "backend": jax.default_backend(),
+            "device_kind": getattr(dev, "device_kind", type(dev).__name__),
+            "jax_version": jax.__version__,
+            "interpret": bool(interpret_default()),
+        }
+    return dict(_META)
+
+
+def batched_recursion_plan(op: str, m: int, n: int, k: int | None = None,
+                           *, backend: str | None = None):
+    """The planner's best *batched, actually-recursing* candidate for the
+    leaf-dispatch BENCH rows — shared by ``bench_ata``/``bench_strassen``
+    so both benches' "batched row" means the same thing. The planner's
+    argmin may be a degenerate single-leaf (or dense) dispatch, which has
+    nothing to contrast; the fallback then forces a couple of levels."""
+    import dataclasses
+
+    from repro import tune
+
+    dims = (m, n, k) if op == "gemm_tn" else (m, n)
+    kw = {} if backend is None else {"backend": backend}
+    cands = tune.candidates(op=op, m=m, n=n, k=k, **kw)
+    for cand in cands:
+        if (
+            cand.algorithm != "dense"
+            and cand.leaf_dispatch == "batched"
+            and cand.n_base < min(dims)
+        ):
+            return cand
+    return dataclasses.replace(
+        cands[0], algorithm="strassen", n_base=max(128, min(dims) // 4),
+        leaf_dispatch="batched",
+    )
 
 
 def effective_gflops(m: int, n: int, seconds: float, r: int = 1, k: int | None = None) -> float:
@@ -49,9 +112,15 @@ def effective_gflops(m: int, n: int, seconds: float, r: int = 1, k: int | None =
 
 
 def emit(name: str, seconds: float, derived: str, *, shape=None, gflops=None, **extra):
-    """CSV row ``name,us_per_call,derived`` + JSON row for BENCH_*.json."""
+    """CSV row ``name,us_per_call,derived`` + JSON row for BENCH_*.json.
+
+    The JSON row always carries :func:`backend_meta`; ``extra`` keys land
+    on top (and may override it, e.g. a subprocess bench reporting the
+    device count it forced).
+    """
     print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)
     row = {"name": name, "seconds": seconds, "derived": derived}
+    row.update(backend_meta())
     if shape is not None:
         row["shape"] = list(shape)
     if gflops is not None:

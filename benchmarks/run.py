@@ -2,7 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV rows and, per module, writes a
 machine-readable ``BENCH_<key>.json`` (list of ``{name, shape, seconds,
-gflops, ...}`` rows) so the perf trajectory is tracked across PRs.
+gflops, ...}`` rows — every row stamped with the backend metadata from
+``benchmarks.common.backend_meta``) so the perf trajectory is tracked
+across PRs.
 
     PYTHONPATH=src python -m benchmarks.run            # all benches
     PYTHONPATH=src python -m benchmarks.run fig3 fig5  # filter by prefix
@@ -12,6 +14,11 @@ gflops, ...}`` rows) so the perf trajectory is tracked across PRs.
 ``--smoke`` shrinks every module's shape sweep/iteration count
 (``common.smoke()``) and skips the subprocess-per-device-count modules
 (fig5/fig6) — minutes of wall time instead of tens.
+
+After each module, fresh rows are diffed against the **committed**
+``BENCH_<key>.json`` baseline (``repro.analysis.perf_diff.bench_diff``)
+and the table printed — report-only, never failing, in ``--smoke``/CI runs
+included. Cross-machine deltas are flagged via the rows' backend metadata.
 """
 
 from __future__ import annotations
@@ -38,6 +45,30 @@ BENCHES = [
 # (fig6 is NOT skipped: in smoke mode bench_distributed runs only its
 # compile-only packed-vs-dense collective-bytes comparison.)
 _SKIP_IN_SMOKE = {"fig5_shared_memory_scaling"}
+
+# committed baselines live next to this package, at the repo root
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_baseline_rows(key: str) -> list:
+    try:
+        with open(os.path.join(_REPO_ROOT, f"BENCH_{key}.json")) as f:
+            return json.load(f).get("rows", [])
+    except (OSError, json.JSONDecodeError):
+        return []
+
+
+def _report_diff(key: str, rows: list) -> None:
+    """Print the fresh-vs-committed diff table. Report-only by contract:
+    any failure here is reported as a note, never propagated."""
+    try:
+        from repro.analysis.perf_diff import bench_diff, print_bench_diff
+
+        baseline = _load_baseline_rows(key)
+        if baseline:
+            print_bench_diff(key, bench_diff(baseline, rows))
+    except Exception as e:  # pragma: no cover - must never fail the bench
+        print(f"# perf diff for {key} unavailable: {type(e).__name__}: {e}")
 
 
 def main() -> None:
@@ -81,6 +112,7 @@ def main() -> None:
                 )
             continue
         rows = common.drain_rows()
+        _report_diff(key, rows)  # diff BEFORE overwriting a root baseline
         with open(path, "w") as f:
             json.dump({"rows": rows}, f, indent=1)
         print(f"# wrote {path} ({len(rows)} rows)", flush=True)

@@ -1,7 +1,7 @@
 """ATA — cache-oblivious Strassen-based ``C = alpha·AᵀA`` (paper Algorithm 1).
 
 The recursion (Eq. 1-2 of the paper), for ``A ∈ R^{m×n}`` split into 2×2
-quadrants with floor/ceil halving:
+quadrants:
 
     C11 = A11ᵀA11 + A21ᵀA21      (two recursive ATA calls)
     C22 = A12ᵀA12 + A22ᵀA22      (two recursive ATA calls)
@@ -16,6 +16,9 @@ TPU adaptation notes (see DESIGN.md §2):
 * the recursion unrolls at trace time (static shapes) — cache-obliviousness
   survives as nested recursive blocking that XLA/Mosaic tiles onto
   HBM→VMEM→VREG;
+* odd shapes are handled by **one root pad** (to a shape divisible by
+  ``2^L`` for the recursion depth ``L``) and a crop-aware root assembly —
+  no per-level padding, every interior split is an exact half;
 * the symmetric saving at the *base-case* level lives in the Pallas ``syrk``
   kernel, which computes only lower-triangular output blocks;
 * **the symmetric saving at the storage level lives here**: the recursion is
@@ -27,7 +30,14 @@ TPU adaptation notes (see DESIGN.md §2):
   written once via static-offset updates), and the mirror to a full square
   happens once for dense output — or never, when the caller asks for packed
   output via ``ata(a, out="packed")``, which returns a
-  :class:`repro.core.symmetric.SymmetricMatrix`.
+  :class:`repro.core.symmetric.SymmetricMatrix`;
+* **leaf dispatch** is pluggable (``Plan.leaf_dispatch``): the legacy
+  ``'unrolled'`` recursion emits ``4^L`` base syrks and ``O(7^L)`` Strassen
+  leaf dots as separate ops; ``'batched'`` runs the same tree
+  level-synchronously — all diagonal leaves as ONE batched syrk and every
+  Strassen leaf of every off-diagonal block as ONE batched TN dot — and
+  decodes back into the identical ``_TriNode`` assembly, bitwise-equal to
+  the unrolled form (tested; see DESIGN.md §2).
 
 ``ata`` is a pure JAX function: it composes with ``jit``, ``vmap``, ``grad``,
 and ``shard_map`` (used by ``repro.core.distributed``). ``ata_batched`` runs
@@ -35,10 +45,10 @@ the same recursion with an explicit leading batch dimension — one trace, one
 kernel launch per base tile over the whole batch — which is what the
 blocked-Shampoo optimizer uses for its per-block gram statistics.
 
-Dispatch tunables (cutoff, variant, kernel blocks, packed block) resolve
-through the ``repro.tune`` planning layer: pass a frozen ``plan=``, pin
-values manually, or pass nothing and let the front door decide
-(see DESIGN.md §7).
+Dispatch tunables (cutoff, variant, kernel blocks, packed block, leaf
+dispatch) resolve through the ``repro.tune`` planning layer: pass a frozen
+``plan=``, pin values manually, or pass nothing and let the front door
+decide (see DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -52,10 +62,16 @@ import jax.numpy as jnp
 from repro.core.strassen import (
     DEFAULT_N_BASE,
     _dot_tn,
+    _encode_fns,
+    _leaf_dot,
+    _pad_root,
     _plan_base_fns,
     _rec_strassen,
     _rec_winograd,
+    _to_blocks,
+    _unblock,
     resolve_tunables,
+    tree_depth,
 )
 from repro.core.symmetric import (
     SymmetricMatrix,
@@ -103,7 +119,8 @@ def _rec_ata(slabs, n_base, base_syrk, strassen_rec, base_dot, acc_dtype):
     of row-halving doubles the slab list instead of materializing partial
     dense sums). Keeping the sum *inside* the recursion means both addends of
     every accumulation share one node structure by construction — the result
-    tree is a function of the column range only.
+    tree is a function of the column range only. Inputs arrive root-padded,
+    so every split below is an exact half.
     """
     n = slabs[0].shape[-1]
     m_max = max(s.shape[-2] for s in slabs)
@@ -113,7 +130,6 @@ def _rec_ata(slabs, n_base, base_syrk, strassen_rec, base_dot, acc_dtype):
             out = out + base_syrk(s)
         return out
 
-    # floor/ceil split, paper Eq. (1): rows of every slab, then columns.
     halves = []
     for s in slabs:
         m1 = s.shape[-2] // 2
@@ -144,24 +160,125 @@ def _rec_ata(slabs, n_base, base_syrk, strassen_rec, base_dot, acc_dtype):
     return _TriNode(c11, c21, c22)
 
 
+# ---------------------------------------------------------------------------
+# level-synchronous batched-leaf formulation of the same tree
+# ---------------------------------------------------------------------------
+
+
+def _accum_axis1(x):
+    """Left-to-right accumulation over axis 1 — the exact add order of the
+    unrolled slab loop (``out = t0; out = out + t1; …``), on a stack."""
+    acc = x[:, 0]
+    for r in range(1, x.shape[1]):
+        acc = acc + x[:, r]
+    return acc
+
+
+def _ata_level_sync(a, L, *, variant, base_syrk, base_dot):
+    """The whole ATA tree with batched leaves: encode every off-diagonal
+    Strassen product into per-level stacks, run ALL ``Σ_ℓ 2^{2ℓ-1}·7^{L-ℓ}``
+    Strassen leaves as one batched TN dot and ALL ``4^L`` diagonal leaves as
+    one batched syrk, then decode back into the identical ``_TriNode`` tree.
+
+    ``a`` arrives root-padded: ``(*batch, M, N)`` with both dims divisible
+    by ``2^L``; it is transposed ONCE into the leaf-block-major layout of
+    ``core.strassen`` (``(R, C, *batch, mL, nL)``), from which every group's
+    operands are leading-axis block slices. An ATA-level-ℓ group is ordered
+    ``s = i·2^ℓ + r`` (``i`` = parent column range, ``r`` = row slab), so
+    the per-``i`` slab accumulation of the unrolled recursion is a
+    left-to-right fold over a reshaped axis.
+    """
+    if L == 0:
+        return base_syrk(a)
+    batch = a.shape[:-2]
+    enc, dec = _encode_fns(variant)
+    R = 1 << L
+    ab = _to_blocks(a, L)           # (R, R, *batch, mL, nL)
+    mL, nL = ab.shape[-2:]
+
+    # encode: one Strassen operand stack per ATA level ℓ (the C21 blocks of
+    # the 2^{ℓ-1} nodes split at level ℓ-1, × 2^ℓ row slabs each), pushed
+    # down the remaining L-ℓ Strassen levels, then concatenated into ONE
+    # leaf stack across all levels (every leaf has the same (mL, nL) shape).
+    parts_a, parts_b, sizes = [], [], []
+    for lev in range(1, L + 1):
+        Rl, H = 1 << lev, 1 << (lev - 1)
+        q = R // Rl
+        # block rows grouped into the 2^ℓ slabs, block columns into
+        # (parent i, left/right, q): operand (i, r) is a pure block slice
+        g = ab.reshape(Rl, q, H, 2, q, *batch, mL, nL)
+        right = jnp.moveaxis(g[:, :, :, 1], 2, 0)   # (H, Rl, q, q, ...)
+        left = jnp.moveaxis(g[:, :, :, 0], 2, 0)
+        A = right.reshape(H * Rl, q, q, *batch, mL, nL)
+        B = left.reshape(H * Rl, q, q, *batch, mL, nL)
+        for _ in range(L - lev):
+            A, B = enc(A, B)
+        parts_a.append(A[:, 0, 0])  # grids collapsed to (1, 1): squeeze
+        parts_b.append(B[:, 0, 0])
+        sizes.append(A.shape[0])
+    P = _leaf_dot(
+        base_dot, jnp.concatenate(parts_a, axis=0), jnp.concatenate(parts_b, axis=0)
+    )
+
+    # all diagonal leaves as one batched syrk, ordered (column block i, slab r)
+    D = jnp.swapaxes(ab, 0, 1).reshape(R * R, *batch, mL, nL)
+    Dp = base_syrk(D.reshape(-1, mL, nL))
+    Dp = Dp.reshape(R, R, *batch, *Dp.shape[-2:])
+    diag = _accum_axis1(Dp)  # (2^L, *batch, nL, nL)
+
+    # decode: per level, pop its slice of the leaf stack, fold the Strassen
+    # levels back up, fold the slab sum in block form, then unblock
+    c21 = {}
+    off = 0
+    for lev, size in zip(range(1, L + 1), sizes):
+        p = P[off : off + size][:, None, None]
+        off += size
+        for _ in range(L - lev):
+            p = dec(p)
+        Rl, Hl = 1 << lev, 1 << (lev - 1)
+        q = R // Rl
+        p = _accum_axis1(p.reshape(Hl, Rl, q, q, *p.shape[3:]))
+        c21[lev] = _unblock(p)      # (H, *batch, N/2^ℓ, N/2^ℓ)
+
+    def build(lev, idx):
+        if lev == L:
+            return diag[idx]
+        return _TriNode(
+            build(lev + 1, 2 * idx), c21[lev + 1][idx], build(lev + 1, 2 * idx + 1)
+        )
+
+    return build(0, 0)
+
+
+# ---------------------------------------------------------------------------
+# root assembly (crop-aware: the node tree covers the padded N ≥ n)
+# ---------------------------------------------------------------------------
+
+
 def _first_leaf(node):
     while isinstance(node, _TriNode):
         node = node.c11
     return node
 
 
-def _assemble_lower(node, buf, off):
+def _assemble_lower(node, buf, off, lim):
     """Write the lower-triangular content of ``node`` into ``buf`` at diagonal
-    offset ``off``. Each block is written exactly once (static-offset
-    ``dynamic_update_slice``); no concatenation, no transposes."""
+    offset ``off``, clipped to ``lim`` (the true n — blocks can overhang into
+    the root pad). Each surviving piece is written exactly once
+    (static-offset updates); no concatenation, no transposes."""
     if not isinstance(node, _TriNode):
-        k = node.shape[-1]
-        return buf.at[..., off : off + k, off : off + k].set(node)
+        h = min(node.shape[-1], lim - off)
+        if h <= 0:
+            return buf
+        return buf.at[..., off : off + h, off : off + h].set(node[..., :h, :h])
     n1 = node.c21.shape[-1]
     m2 = node.c21.shape[-2]
-    buf = _assemble_lower(node.c11, buf, off)
-    buf = buf.at[..., off + n1 : off + n1 + m2, off : off + n1].set(node.c21)
-    return _assemble_lower(node.c22, buf, off + n1)
+    buf = _assemble_lower(node.c11, buf, off, lim)
+    r0 = off + n1
+    h, w = min(m2, lim - r0), min(n1, lim - off)
+    if h > 0 and w > 0:
+        buf = buf.at[..., r0 : r0 + h, off : off + w].set(node.c21[..., :h, :w])
+    return _assemble_lower(node.c22, buf, off + n1, lim)
 
 
 def _lower_dense(node, n):
@@ -170,7 +287,7 @@ def _lower_dense(node, n):
     leaf = _first_leaf(node)
     batch = leaf.shape[:-2]
     buf = jnp.zeros((*batch, n, n), leaf.dtype)
-    return _assemble_lower(node, buf, 0)
+    return _assemble_lower(node, buf, 0, n)
 
 
 def _finalize_dense(node, n):
@@ -180,15 +297,23 @@ def _finalize_dense(node, n):
     return sym_tile(_lower_dense(node, n))
 
 
-def _assemble_packed(node, buf, off, bn):
+def _assemble_packed(node, buf, off, bn, lim):
     # write_packed_region (core.symmetric): each block lands in packed
-    # storage via static-offset updates, strictly-upper pieces skipped.
+    # storage via static-offset updates, strictly-upper pieces skipped;
+    # blocks overhanging ``lim`` (the packed grid extent) are clipped.
     if not isinstance(node, _TriNode):
-        return write_packed_region(buf, node, off, off, bn)
+        h = min(node.shape[-1], lim - off)
+        if h <= 0:
+            return buf
+        return write_packed_region(buf, node[..., :h, :h], off, off, bn)
     n1 = node.c21.shape[-1]
-    buf = _assemble_packed(node.c11, buf, off, bn)
-    buf = write_packed_region(buf, node.c21, off + n1, off, bn)
-    return _assemble_packed(node.c22, buf, off + n1, bn)
+    m2 = node.c21.shape[-2]
+    buf = _assemble_packed(node.c11, buf, off, bn, lim)
+    r0 = off + n1
+    h, w = min(m2, lim - r0), min(n1, lim - off)
+    if h > 0 and w > 0:
+        buf = write_packed_region(buf, node.c21[..., :h, :w], r0, off, bn)
+    return _assemble_packed(node.c22, buf, off + n1, bn, lim)
 
 
 def _finalize_packed(node, n, packed_block):
@@ -199,7 +324,7 @@ def _finalize_packed(node, n, packed_block):
     leaf = _first_leaf(node)
     batch = leaf.shape[:-2]
     buf = jnp.zeros((*batch, nb * (nb + 1) // 2, bn, bn), leaf.dtype)
-    return SymmetricMatrix(_assemble_packed(node, buf, 0, bn), n, bn)
+    return SymmetricMatrix(_assemble_packed(node, buf, 0, bn, nb * bn), n, bn)
 
 
 def _ata_impl(
@@ -211,6 +336,7 @@ def _ata_impl(
     plan,
     n_base,
     variant,
+    leaf_dispatch,
     base_syrk,
     base_dot,
     acc_dtype,
@@ -219,11 +345,11 @@ def _ata_impl(
 ):
     if out not in ("dense", "packed"):
         raise ValueError(f"unknown output mode {out!r}; use 'dense' or 'packed'")
-    plan, n_base, variant, packed_block = resolve_tunables(
+    plan, n_base, variant, packed_block, leaf_dispatch = resolve_tunables(
         plan, n_base, variant, packed_block,
         op="ata", m=a.shape[-2], n=a.shape[-1],
         batch=a.shape[0] if a.ndim > 2 else 0,
-        dtype=str(a.dtype), out=out,
+        dtype=str(a.dtype), out=out, leaf_dispatch=leaf_dispatch,
     )
     if variant not in ("strassen", "winograd"):
         raise ValueError(f"unknown variant {variant!r}")
@@ -234,15 +360,22 @@ def _ata_impl(
         base_dot = functools.partial(_dot_tn, acc_dtype=acc_dtype)
 
     n = a.shape[-1]
-    strassen_rec = _rec_strassen if variant == "strassen" else _rec_winograd
-    node = _rec_ata(
-        [a],
-        n_base=n_base,
-        base_syrk=base_syrk,
-        strassen_rec=strassen_rec,
-        base_dot=base_dot,
-        acc_dtype=acc_dtype,
-    )
+    L = tree_depth(a.shape[-2:], n_base)
+    ap = _pad_root(a, L) if L else a
+    if leaf_dispatch == "batched":
+        node = _ata_level_sync(
+            ap, L, variant=variant, base_syrk=base_syrk, base_dot=base_dot
+        )
+    else:
+        strassen_rec = _rec_strassen if variant == "strassen" else _rec_winograd
+        node = _rec_ata(
+            [ap],
+            n_base=n_base,
+            base_syrk=base_syrk,
+            strassen_rec=strassen_rec,
+            base_dot=base_dot,
+            acc_dtype=acc_dtype,
+        )
 
     if out == "packed":
         result = _finalize_packed(node, n, packed_block)
@@ -276,6 +409,7 @@ def ata(
     plan=None,
     n_base: Optional[int] = None,
     variant: Optional[str] = None,
+    leaf_dispatch: Optional[str] = None,
     base_syrk: Optional[Callable] = None,
     base_dot: Optional[Callable] = None,
     acc_dtype=jnp.float32,
@@ -285,26 +419,35 @@ def ata(
     """``C = alpha·AᵀA (+ beta·C)`` via the paper's ATA algorithm.
 
     Args:
-      a: ``(m, n)`` input, any rectangular shape (odd sizes handled by the
-        floor/ceil split here and virtual padding inside Strassen).
+      a: ``(m, n)`` input, any rectangular shape (odd sizes handled by one
+        root pad to a ``2^L``-divisible shape and a crop-aware assembly).
       alpha, c, beta: BLAS-style scaling/accumulation. With ``out='packed'``,
         ``c`` must itself be a ``SymmetricMatrix`` of matching layout.
       plan: a frozen :class:`repro.tune.Plan` carrying every tunable
-        (cutoff, variant, kernel blocks, packed block). With no plan and no
-        pinned tunables the dispatch is planned through ``repro.tune.plan``
-        — the analytic cost model, or a measured plan from the cache.
-        Note the output *type* always follows ``out``, never the plan.
+        (cutoff, variant, kernel blocks, packed block, leaf dispatch). With
+        no plan and no pinned tunables the dispatch is planned through
+        ``repro.tune.plan`` — the analytic cost model, or a measured plan
+        from the cache. Note the output *type* always follows ``out``,
+        never the plan.
       n_base: recursion cutoff; tiles with any dim ≤ n_base go to the base
         syrk/gemm. The TPU analogue of the paper's "fits in cache".
-        Pinning this (or ``variant``/``packed_block``) manually bypasses
-        the planner and fills the rest from ``repro.tune.defaults``.
+        Pinning this (or ``variant``) manually bypasses the planner and
+        fills the rest from ``repro.tune.defaults``.
       variant: Strassen variant for the C21 off-diagonal products —
         ``'strassen'`` (paper-faithful) or ``'winograd'`` (beyond-paper,
         15 adds).
+      leaf_dispatch: ``'unrolled'`` (one op per leaf) or ``'batched'``
+        (level-synchronous: ONE batched syrk for all diagonal leaves + ONE
+        batched TN dot for every Strassen leaf — bitwise-equal result,
+        O(levels) jaxpr). Defaults to the plan's choice; pinning it alone
+        does not bypass the planner (it never changes values).
       base_syrk: base-case ``f(a) -> aᵀa`` (full, bitwise-symmetric tile).
         Defaults to a TN dot_general (or the plan's Pallas kernel); pass
-        ``repro.kernels.ops.syrk`` to force the kernel.
-      base_dot: base-case ``f(a, b) -> aᵀb`` for the Strassen leaves.
+        ``repro.kernels.ops.syrk`` to force the kernel. Must accept one
+        leading batch dim (it receives the whole diagonal-leaf stack when
+        ``leaf_dispatch='batched'``).
+      base_dot: base-case ``f(a, b) -> aᵀb`` for the Strassen leaves (same
+        leading-batch contract).
       acc_dtype: accumulation dtype.
       out: ``'dense'`` → ``(n, n)`` full symmetric array (one mirror, at the
         root). ``'packed'`` → :class:`SymmetricMatrix` holding only the
@@ -325,6 +468,7 @@ def ata(
         plan=plan,
         n_base=n_base,
         variant=variant,
+        leaf_dispatch=leaf_dispatch,
         base_syrk=base_syrk,
         base_dot=base_dot,
         acc_dtype=acc_dtype,
@@ -342,6 +486,7 @@ def ata_batched(
     plan=None,
     n_base: Optional[int] = None,
     variant: Optional[str] = None,
+    leaf_dispatch: Optional[str] = None,
     base_syrk: Optional[Callable] = None,
     base_dot: Optional[Callable] = None,
     acc_dtype=jnp.float32,
@@ -354,9 +499,12 @@ def ata_batched(
     recursion itself: every base case is a single *batched* syrk over all B
     tiles (one kernel launch with a leading batch grid dimension when the
     Pallas kernel is the base), and every Strassen leaf is a batched TN dot.
-    ``out='packed'`` returns a ``SymmetricMatrix`` whose blocks carry the
-    leading batch dim: ``(B, T, bn, bn)``. This is the gram-statistics
-    entry point for the blocked-Shampoo optimizer.
+    With ``leaf_dispatch='batched'`` the leaf stack and the operand batch
+    are flattened into that one leading kernel dim, so the whole gram batch
+    still costs two launches total. ``out='packed'`` returns a
+    ``SymmetricMatrix`` whose blocks carry the leading batch dim:
+    ``(B, T, bn, bn)``. This is the gram-statistics entry point for the
+    blocked-Shampoo optimizer.
     """
     if a.ndim != 3:
         raise ValueError(f"ata_batched expects a (B, m, n) operand, got {a.shape}")
@@ -368,6 +516,7 @@ def ata_batched(
         plan=plan,
         n_base=n_base,
         variant=variant,
+        leaf_dispatch=leaf_dispatch,
         base_syrk=base_syrk,
         base_dot=base_dot,
         acc_dtype=acc_dtype,

@@ -20,7 +20,10 @@ jax-native SPMD (see DESIGN.md §2):
   to the devices of ``task_axis`` (uniform shapes keep the program SPMD);
   each device computes its tiles with the sequential ATA/Strassen machinery
   at the leaf level (paper §4.1.3: "Strassen can still be used at
-  leaf-level computation"). Partial sums over a ``row_axis`` (if A is also
+  leaf-level computation") — including the level-synchronous
+  ``leaf_dispatch='batched'`` formulation when the plan picks it, so each
+  device's tile products cost O(levels) dispatched ops, not O(7^L)
+  (DESIGN.md §4). Partial sums over a ``row_axis`` (if A is also
   row-sharded — the ATA-D two-level layout) are combined with a single
   ``psum`` **of the packed tile stack** — ``T·w² ≈ n²/2`` words instead of
   the dense ``n²``, reproducing the paper's packed-low(C) retrieval saving
@@ -78,6 +81,7 @@ def gram_rowshard(
     plan=None,
     n_base: Optional[int] = None,
     variant: Optional[str] = None,
+    leaf_dispatch: Optional[str] = None,
     use_ata: Optional[bool] = None,
     out: str = "dense",
     packed_block: Optional[int] = None,
@@ -87,9 +91,12 @@ def gram_rowshard(
     ``a_local`` is this device's row block; the result is the full replicated
     ``AᵀA``. The local product uses the sequential ATA algorithm, so the
     paper's 2/3-Strassen flop saving applies on every chip. Tunables resolve
-    through the planner (`repro.tune.plan` on the local shape) unless pinned;
-    ``use_ata=False`` — or a plan whose algorithm is ``'dense'`` — falls back
-    to the classical one-dot gram.
+    through the planner (`repro.tune.plan` on the local shape) unless pinned
+    — including ``leaf_dispatch``: the per-device body reuses the batched
+    leaf formulation when the plan (or the caller) asks for it, so the SPMD
+    schedule inherits the O(levels)-jaxpr win per shard. ``use_ata=False``
+    — or a plan whose algorithm is ``'dense'`` — falls back to the
+    classical one-dot gram.
 
     ``out='packed'`` keeps the paper's low(C) form **across the psum**: the
     local gram comes out of ``ata(..., out='packed')`` mirror-free and the
@@ -106,7 +113,7 @@ def gram_rowshard(
     if use_ata:
         local = ata(
             a_local, plan=plan, n_base=n_base, variant=variant,
-            out=out, packed_block=packed_block,
+            leaf_dispatch=leaf_dispatch, out=out, packed_block=packed_block,
         )
     else:
         local = jax.lax.dot_general(
@@ -172,6 +179,7 @@ def ata_tile_parallel(
     plan=None,
     n_base: Optional[int] = None,
     variant: Optional[str] = None,
+    leaf_dispatch: Optional[str] = None,
     use_strassen: bool = True,
     nb: Optional[int] = None,
     out: str = "dense",
@@ -193,11 +201,16 @@ def ata_tile_parallel(
         (``out='packed'`` scales the packed blocks; the equivalence
         ``alpha·packed == pack(alpha·dense)`` holds bitwise).
       plan: :class:`repro.tune.Plan` (its ``nb``/``tile_w`` distributed
-        branch supplies the stripe tiling; ``n_base``/``variant`` feed the
-        leaf-level Strassen; ``packed_block`` the packed output grid).
-        Default: the planner front door with ``devices=p_task`` and the
-        requested ``out`` — packed plans snap ``tile_w`` to the packed
-        block grid so retrieval is a pure slice.
+        branch supplies the stripe tiling; ``n_base``/``variant``/
+        ``leaf_dispatch`` feed the leaf-level Strassen of every per-device
+        tile body — a batched plan runs each device's tile products through
+        the level-synchronous one-dot-per-tile dispatch). Default: the
+        planner front door with ``devices=p_task`` and the requested
+        ``out`` — packed plans snap ``tile_w`` to the packed block grid so
+        retrieval is a pure slice.
+      leaf_dispatch: explicit override of the plan's leaf dispatch for the
+        per-device Strassen bodies (``'unrolled'``/``'batched'`` — values
+        are bitwise-identical either way).
       nb: stripe count override (default: the plan / :func:`choose_tiling`).
       out: ``'dense'`` → replicated ``(n, n)`` array, assembled as
         ``packed.to_dense()`` at the root (one mirror, at the conversion
@@ -235,6 +248,8 @@ def ata_tile_parallel(
     if plan is not None:
         n_base = plan.n_base if n_base is None else n_base
         variant = plan.variant if variant is None else variant
+        if leaf_dispatch is None:
+            leaf_dispatch = getattr(plan, "leaf_dispatch", None)
         if packed_block is None:
             packed_block = plan.packed_block
         if plan.algorithm == "dense":
@@ -262,7 +277,8 @@ def ata_tile_parallel(
         aj = jax.lax.dynamic_slice_in_dim(a_local, j * w, w, axis=1)
         if use_strassen:
             return strassen_tn(
-                ai, aj, n_base=n_base, variant=variant, acc_dtype=acc_dtype
+                ai, aj, n_base=n_base, variant=variant,
+                leaf_dispatch=leaf_dispatch, acc_dtype=acc_dtype,
             )
         return jax.lax.dot_general(
             ai, aj, (((0,), (0,)), ((), ())),
@@ -399,11 +415,14 @@ def gemm_tn_colshard(
     plan=None,
     n_base: Optional[int] = None,
     variant: Optional[str] = None,
+    leaf_dispatch: Optional[str] = None,
     use_strassen: bool = True,
 ) -> jax.Array:
     """Distributed ``C = AᵀB``: each device owns C's column stripe for its
     B shard — the FastStrassen leaves of the task tree, collision-free.
-    Leaf tunables resolve through the planner unless pinned."""
+    Leaf tunables (including ``leaf_dispatch`` — the per-device stripe
+    product reuses the batched-leaf formulation when the plan picks it)
+    resolve through the planner unless pinned."""
     m, n = a.shape
     mb, k = b.shape
     if m != mb:
@@ -429,6 +448,8 @@ def gemm_tn_colshard(
     if plan is not None:
         n_base = plan.n_base if n_base is None else n_base
         variant = plan.variant if variant is None else variant
+        if leaf_dispatch is None:
+            leaf_dispatch = getattr(plan, "leaf_dispatch", None)
         if plan.algorithm == "dense":
             use_strassen = False
     # unpinned n_base/variant fall through to strassen_tn, which self-plans
@@ -436,7 +457,10 @@ def gemm_tn_colshard(
 
     def local_fn(a_local, b_local):
         if use_strassen:
-            c_local = strassen_tn(a_local, b_local, n_base=n_base, variant=variant)
+            c_local = strassen_tn(
+                a_local, b_local, n_base=n_base, variant=variant,
+                leaf_dispatch=leaf_dispatch,
+            )
         else:
             c_local = jax.lax.dot_general(
                 a_local, b_local, (((0,), (0,)), ((), ())),

@@ -5,8 +5,26 @@
 * ``gemm_tn``— TN matmul ``alpha·AᵀB`` (FastStrassen base case; Aᵀ never
   materialized).
 
-``ops`` holds the jit'd public wrappers (interpret-mode on CPU); ``ref``
-holds the pure-jnp oracles used by the kernel test sweeps.
+Two package-wide contracts, stated here once and honored by BOTH kernels
+(``repro.kernels.syrk``, ``repro.kernels.gemm_tn``) and their public
+wrappers (``repro.kernels.ops``):
+
+* **Interpret mode** (``ops.interpret_default()``): ``interpret=None`` at a
+  wrapper resolves to ``jax.default_backend() != "tpu"`` — compiled Mosaic
+  on a real TPU, Pallas interpret mode (the kernel body executed in Python
+  by XLA, for correctness work) everywhere else. It is a *backend* property,
+  not a debug flag: pass ``interpret=`` explicitly only to force one mode.
+
+* **Batched grid** (leading dim = leaf batch): an optional leading operand
+  dimension becomes the leading (``"parallel"``) grid dimension — the whole
+  batch is ONE kernel launch, never a vmap-of-pallas. The batched-leaf
+  recursion (``Plan.leaf_dispatch='batched'``) relies on this: it flattens
+  its leaf stack (and any operand batch) into exactly that one leading dim,
+  so all ``7^L`` Strassen leaves / all ``4^L`` diagonal leaves land in a
+  single launch.
+
+``ops`` holds the jit'd public wrappers; ``ref`` holds the pure-jnp oracles
+used by the kernel test sweeps.
 """
 
 from repro.kernels import ops, ref

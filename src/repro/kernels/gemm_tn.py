@@ -7,10 +7,16 @@ This is the base-case engine of FastStrassen on TPU. Design points:
   paper's observation that ``AᵀA``-style access is cache-hostile (Section 3):
   on TPU the "transpose" happens inside the MXU dataflow.
 
-* **Blocking**: grid ``(n/bn, k/bk, m/bm)`` with the contraction dimension
-  minor-most so Mosaic revisits the same output tile across the reduction
-  ("arbitrary" semantics); the f32 accumulator lives in a VMEM scratch tile
-  and is only written back to HBM once per output tile.
+* **Blocking**: grid ``([B,] n/bn, k/bk, m/bm)`` with the contraction
+  dimension minor-most so Mosaic revisits the same output tile across the
+  reduction ("arbitrary" semantics); the f32 accumulator lives in a VMEM
+  scratch tile and is only written back to HBM once per output tile.
+
+* **Batch**: an optional leading batch grid dimension per the package-wide
+  batched-grid contract (see ``repro.kernels`` — leading dim = leaf batch):
+  ``(B, m, n) × (B, m, k)`` runs as ONE kernel launch, which is how the
+  level-synchronous ``leaf_dispatch='batched'`` recursion lands its whole
+  Strassen leaf stack here.
 
 * **VMEM budget**: per grid step the working set is
   ``bm·bn + bm·bk`` input elements + ``bn·bk`` f32 accumulator. The default
@@ -38,31 +44,31 @@ from repro.tune.defaults import GEMM_BLOCKS as DEFAULT_BLOCKS
 __all__ = ["gemm_tn_pallas", "DEFAULT_BLOCKS"]
 
 
-def _gemm_tn_kernel(a_ref, b_ref, c_ref, acc_ref, *, alpha: float):
-    """One (i, j, l) grid step: acc += A[l,i]ᵀ · B[l,j]."""
+def _gemm_tn_kernel(a_ref, b_ref, c_ref, acc_ref, *, alpha: float, l_axis: int):
+    """One ([b,] i, j, l) grid step: acc += A[l,i]ᵀ · B[l,j]."""
 
-    @pl.when(pl.program_id(2) == 0)
+    @pl.when(pl.program_id(l_axis) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jax.lax.dot_general(
-        a_ref[...],
-        b_ref[...],
+        a_ref[...].reshape(a_ref.shape[-2:]),
+        b_ref[...].reshape(b_ref.shape[-2:]),
         dimension_numbers=(((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
 
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    @pl.when(pl.program_id(l_axis) == pl.num_programs(l_axis) - 1)
     def _flush():
-        c_ref[...] = (alpha * acc_ref[...]).astype(c_ref.dtype)
+        c_ref[...] = (alpha * acc_ref[...]).astype(c_ref.dtype).reshape(c_ref.shape)
 
 
 def _pad_to(x, mult0, mult1):
-    m, n = x.shape
+    m, n = x.shape[-2:]
     pm = (-m) % mult0
     pn = (-n) % mult1
     if pm or pn:
-        x = jnp.pad(x, ((0, pm), (0, pn)))
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, pm), (0, pn)])
     return x
 
 
@@ -78,15 +84,20 @@ def gemm_tn_pallas(
     interpret: bool = False,
     out_dtype=jnp.float32,
 ) -> jax.Array:
-    """``C = alpha·AᵀB`` with A:(m,n), B:(m,k) → C:(n,k).
+    """``C = alpha·AᵀB`` with A:(m,n) or (B,m,n), B:(m,k) or (B,m,k).
 
     Inputs are zero-padded up to block multiples (zero rows of the
     contraction dim contribute nothing; padded output rows/cols are cropped).
+    A leading batch dim becomes the leading grid dimension — one launch for
+    the whole batch (the ``repro.kernels`` batched-grid contract).
     """
-    if a.ndim != 2 or b.ndim != 2 or a.shape[0] != b.shape[0]:
+    if a.ndim not in (2, 3) or a.ndim != b.ndim:
         raise ValueError(f"bad TN shapes: {a.shape} x {b.shape}")
-    m, n = a.shape
-    _, k = b.shape
+    if a.shape[-2] != b.shape[-2] or a.shape[:-2] != b.shape[:-2]:
+        raise ValueError(f"bad TN shapes: {a.shape} x {b.shape}")
+    batched = a.ndim == 3
+    m, n = a.shape[-2:]
+    k = b.shape[-1]
     bm, bn, bk = blocks
     # clamp blocks to (padded) problem size to avoid huge pads on small inputs
     bm = min(bm, max(8, -(-m // 8) * 8))
@@ -95,24 +106,34 @@ def gemm_tn_pallas(
 
     a = _pad_to(a, bm, bn)
     b = _pad_to(b, bm, bk)
-    mp, np_ = a.shape
-    _, kp = b.shape
+    mp, np_ = a.shape[-2:]
+    kp = b.shape[-1]
 
-    grid = (np_ // bn, kp // bk, mp // bm)
+    # one spec construction for both layouts: the batched case prepends the
+    # batch coordinate to the grid, every block shape, and every index map
+    # (same scheme as the syrk kernel).
+    lead = (1,) if batched else ()
+    batch_dims = a.shape[:-2]
+    grid = batch_dims + (np_ // bn, kp // bk, mp // bm)
+    l_axis = len(grid) - 1
+    _pre = lambda idx: idx[:-3]  # () unbatched, (b,) batched
+
     out = pl.pallas_call(
-        functools.partial(_gemm_tn_kernel, alpha=alpha),
+        functools.partial(_gemm_tn_kernel, alpha=alpha, l_axis=l_axis),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j, l: (l, i)),
-            pl.BlockSpec((bm, bk), lambda i, j, l: (l, j)),
+            pl.BlockSpec(lead + (bm, bn), lambda *idx: _pre(idx) + (idx[-1], idx[-3])),
+            pl.BlockSpec(lead + (bm, bk), lambda *idx: _pre(idx) + (idx[-1], idx[-2])),
         ],
-        out_specs=pl.BlockSpec((bn, bk), lambda i, j, l: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((np_, kp), out_dtype),
+        out_specs=pl.BlockSpec(
+            lead + (bn, bk), lambda *idx: _pre(idx) + (idx[-3], idx[-2])
+        ),
+        out_shape=jax.ShapeDtypeStruct(batch_dims + (np_, kp), out_dtype),
         scratch_shapes=[pltpu.VMEM((bn, bk), jnp.float32)],
         compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
+            dimension_semantics=("parallel",) * l_axis + ("arbitrary",),
         ),
         interpret=interpret,
         name="gemm_tn",
     )(a, b)
-    return out[:n, :k]
+    return out[..., :n, :k]

@@ -1,9 +1,12 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-On TPU the kernels compile through Mosaic; on CPU (this container) they run
-in ``interpret=True`` mode, which executes the kernel body in Python for
-correctness validation. ``repro.core.ata``/``strassen_tn`` accept these as
-``base_syrk``/``base_dot`` so the whole recursion bottoms out in the kernels.
+Both package-wide contracts — interpret-mode resolution and the batched
+grid (leading dim = leaf batch, one launch per stack) — are stated once in
+the ``repro.kernels`` package docstring; the wrappers here implement them.
+``repro.core.ata``/``strassen_tn`` accept these as ``base_syrk``/``base_dot``
+so the whole recursion bottoms out in the kernels — including the
+level-synchronous ``leaf_dispatch='batched'`` recursion, which hands each
+wrapper its entire leaf stack as the one leading batch dim.
 """
 
 from __future__ import annotations
@@ -22,7 +25,12 @@ __all__ = ["syrk", "gemm_tn", "interpret_default"]
 
 
 def interpret_default() -> bool:
-    """Pallas interpret mode unless running on a real TPU."""
+    """Pallas interpret mode unless running on a real TPU.
+
+    The canonical resolution of ``interpret=None`` for every wrapper in
+    this module (see the ``repro.kernels`` package docstring): compiled
+    Mosaic on TPU, interpret mode on any other backend.
+    """
     return jax.default_backend() != "tpu"
 
 
@@ -38,12 +46,14 @@ def syrk(
 ):
     """``alpha·AᵀA`` via the Pallas lower-triangular syrk kernel.
 
-    Accepts ``(m, n)`` or batched ``(B, m, n)`` input (the batch runs as a
-    leading grid dimension — one launch). ``out='packed'`` returns the
+    Accepts ``(m, n)`` or batched ``(B, m, n)`` input — the batch runs as
+    the leading grid dimension, one launch for the whole stack (the
+    ``repro.kernels`` batched-grid contract). ``out='packed'`` returns the
     mirror-free :class:`repro.core.symmetric.SymmetricMatrix` form;
     ``out='dense'`` uses the in-kernel dual-write (no mirror post-pass).
     Block shapes come from ``blocks``, else the ``plan`` (a
-    :class:`repro.tune.Plan`), else the tuned defaults.
+    :class:`repro.tune.Plan`), else the tuned defaults. ``interpret=None``
+    resolves via :func:`interpret_default`.
     """
     if interpret is None:
         interpret = interpret_default()
@@ -69,8 +79,15 @@ def gemm_tn(
     interpret=None,
     out_dtype=jnp.float32,
 ):
-    """``alpha·AᵀB`` via the Pallas TN matmul kernel (blocks from the
-    argument, else the ``plan``, else the tuned defaults)."""
+    """``alpha·AᵀB`` via the Pallas TN matmul kernel.
+
+    Accepts ``(m, n) × (m, k)`` or batched ``(B, m, n) × (B, m, k)`` — the
+    batch is the leading grid dimension, one launch for the whole stack
+    (the ``repro.kernels`` batched-grid contract; this is where the
+    batched-leaf recursion lands its ``7^L`` Strassen leaves). Blocks from
+    the argument, else the ``plan``, else the tuned defaults;
+    ``interpret=None`` resolves via :func:`interpret_default`.
+    """
     if interpret is None:
         interpret = interpret_default()
     if blocks is None and plan is not None:

@@ -7,10 +7,13 @@ work and HBM write traffic versus a general TN matmul — the TPU analogue of
 the paper computing only ``low(C)`` at every level.
 
 Grid design: a **packed triangular grid** ``([B,] T, m/bm)`` where
-``T = nb·(nb+1)/2`` enumerates the lower-triangular block pairs (with an
-optional leading batch dimension — batched inputs run as one kernel launch,
-not a vmap). Pallas TPU grids are rectangular, so the block coordinates are
-recovered inside the index maps from the triangular index ``t``:
+``T = nb·(nb+1)/2`` enumerates the lower-triangular block pairs. The
+optional leading batch dimension follows the package-wide batched-grid
+contract (see the ``repro.kernels`` docstring: leading dim = leaf batch,
+one launch per stack, never vmap-of-pallas — the batched-leaf recursion
+lands all its diagonal leaves here in one call). Pallas TPU grids are
+rectangular, so the block coordinates are recovered inside the index maps
+from the triangular index ``t``:
 
     i = ⌊(√(8t+1) − 1)/2⌋,   j = t − i(i+1)/2      (j ≤ i)
 

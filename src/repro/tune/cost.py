@@ -31,13 +31,24 @@ comparison honest; ``add_bytes`` charges each VPU addition flop
 into the consuming dot's reads; higher on CPU), the Strassen memory
 overhead the paper's Section 3.3 engineers around.
 
+A third, previously-unpriced term joins the roofline in this revision:
+**per-call launch/graph overhead** (``dispatch_calls × launch_overhead_s``).
+The unrolled recursion hands the runtime one op per leaf — ``7^L`` dots —
+and on small leaves that dispatch tax, not flops, is what loses to a single
+plain dot (BENCH_strassen's 0.19–0.61 speedups). The level-synchronous
+``leaf_dispatch='batched'`` formulation collapses it to O(levels) calls at
+the price of materialized (un-fused) operand-combination stacks; the model
+prices both so the argmin can pick per shape.
+
 Candidate axes (``candidates``): algorithm (dense-dot vs strassen vs
 winograd vs the ATA recursion), output mode (dense vs packed), recursion
-cutoff ``n_base``, and the Pallas kernel block shapes. The algorithm /
+cutoff ``n_base``, leaf dispatch (unrolled vs batched — value-identical,
+speed-different), and the Pallas kernel block shapes. The algorithm /
 ``n_base`` choice is deliberately **out-invariant** (scored with the dense
 output term) so that ``out='packed'`` and ``out='dense'`` plans of one
 problem always run the identical recursion — packed results stay bitwise
-equal to dense ones regardless of cache state.
+equal to dense ones regardless of cache state (``leaf_dispatch`` cannot
+break this: both dispatches are bitwise-equal by construction, tested).
 
 ``distributed_tiling`` is the planner's distributed branch: the lower
 triangle tiling search that used to live in ``core.distributed
@@ -67,6 +78,7 @@ __all__ = [
     "machine_for",
     "predict_seconds",
     "retrieval_bytes",
+    "dispatch_calls",
     "candidates",
     "analytic_plan",
     "default_plan",
@@ -108,6 +120,12 @@ class Plan:
     use_kernels: bool            # Pallas base kernels (TPU) vs dot_general
     syrk_blocks: Tuple[int, int]
     gemm_blocks: Tuple[int, int, int]
+    # how the recursion's leaves reach the hardware: 'unrolled' = one
+    # dot/syrk op per leaf (7^L dots in the jaxpr), 'batched' = the
+    # level-synchronous formulation (all leaves in one batched call,
+    # bitwise-equal values). Pre-leaf_dispatch cache entries deserialize to
+    # 'unrolled' — exactly what they were measured with.
+    leaf_dispatch: str = "unrolled"
     devices: int = 1             # distributed branch: task-axis size
     nb: Optional[int] = None     # distributed stripe count (devices > 1)
     tile_w: Optional[int] = None  # distributed stripe width (devices > 1)
@@ -155,6 +173,10 @@ class Machine:
     kernels: bool          # Pallas kernels compile natively (not interpret)
     add_word_cost: float   # extra HBM words charged per VPU addition flop
     xla_tile: int = 256    # nominal output tile of the non-Pallas matmul
+    # per dispatched op: runtime launch/dispatch + amortized graph/compile
+    # overhead. This is the term the batched leaf dispatch exists to kill:
+    # unrolled recursion pays it 7^L times, batched O(L) times.
+    launch_overhead_s: float = 5e-6
 
     def mxu_eff(self, d: int) -> float:
         d = max(int(d), 1)
@@ -166,18 +188,28 @@ def _tpu_machine() -> Machine:
     # parameterization (PEAK_FLOPS / HBM_BW are defined there).
     from repro.analysis import roofline
 
-    return Machine("tpu", roofline.PEAK_FLOPS, roofline.HBM_BW, 128, True, 1.0)
+    return Machine(
+        "tpu", roofline.PEAK_FLOPS, roofline.HBM_BW, 128, True, 1.0,
+        launch_overhead_s=1.5e-6,
+    )
 
 
 MACHINES = {
     "tpu": _tpu_machine,
-    # Container-class CPU: ~100 GFLOP/s effective matmul, ~20 GB/s streams.
-    # Only the *ratios* matter for plan choice; d_half/add_word_cost are
-    # calibrated so the analytic argmin reproduces the measured CPU
-    # crossover (n_base 256-512 on the benchmarked gram shapes).
-    "cpu": lambda: Machine("cpu", 1.0e11, 2.0e10, 48, False, 1.5),
+    # Container-class CPU, recalibrated against the min-of-interleaved
+    # floors of the batched-leaf PR's measurement sweep (the old 1e11-peak/
+    # d_half=48 numbers predated the per-call overhead term and let deep
+    # tiny-leaf recursions look free): XLA's dense dot sustains ~205 GFLOP/s
+    # at 1024³ on this container (peak 2.2e11), while 256-leaf recursions
+    # run at <0.4 of that (d_half 512 — CPU matmul efficiency falls off far
+    # harder than the MXU's), and each dispatched op costs ~50 µs of thunk
+    # overhead. Under this model the argmin at the bench shapes matches the
+    # measured ranking: dense < batched(L=1) < batched(deep) ≈ unrolled.
+    "cpu": lambda: Machine("cpu", 2.2e11, 2.0e10, 512, False, 1.5,
+                           launch_overhead_s=5e-5),
     # A100-class default for completeness (untuned; autotune refines).
-    "gpu": lambda: Machine("gpu", 1.56e14, 1.6e12, 128, False, 1.0),
+    "gpu": lambda: Machine("gpu", 1.56e14, 1.6e12, 128, False, 1.0,
+                           launch_overhead_s=8e-6),
 }
 
 
@@ -210,6 +242,54 @@ def _ata_mult_flops(m: int, n: int, n_base: int) -> int:
     return 4 * _ata_mult_flops(m2, n2, n_base) + 2 * _strassen_mult_flops(
         m2, n2, n2, n_base
     )
+
+
+@functools.lru_cache(maxsize=None)
+def _strassen_leaves(m: int, n: int, k: int, n_base: int) -> int:
+    """Leaf (base-matmul) count of the TN Strassen recursion."""
+    if min(m, n, k) <= n_base:
+        return 1
+    mp, np_, kp = m + (m & 1), n + (n & 1), k + (k & 1)
+    return 7 * _strassen_leaves(mp // 2, np_ // 2, kp // 2, n_base)
+
+
+@functools.lru_cache(maxsize=None)
+def _ata_leaves(m: int, n: int, n_base: int) -> Tuple[int, int]:
+    """(syrk_leaves, gemm_leaves) of the ATA tree (4 sub-ATAs + 2 Strassen
+    off-diagonal products per level, mirroring `_ata_mult_flops`)."""
+    if min(m, n) <= n_base:
+        return 1, 0
+    mp, np_ = m + (m & 1), n + (n & 1)
+    m2, n2 = mp // 2, np_ // 2
+    s, g = _ata_leaves(m2, n2, n_base)
+    return 4 * s, 4 * g + 2 * _strassen_leaves(m2, n2, n2, n_base)
+
+
+def _levels(op, m, n, k, n_base) -> int:
+    # the recursion's own depth rule — pricing must count the exact tree
+    # the dispatch executes (core.strassen only reaches back into tune
+    # lazily, so this import is cycle-free, like core.reference above)
+    from repro.core.strassen import tree_depth
+
+    return tree_depth((m, n, k) if op == "gemm_tn" else (m, n), n_base)
+
+
+def dispatch_calls(op, algorithm, m, n, k, n_base, leaf_dispatch) -> int:
+    """Ops the dispatch hands the runtime — the per-call-overhead multiplier.
+
+    ``'unrolled'`` pays one dispatched dot/syrk per leaf (``7^L`` for
+    Strassen, ``4^L`` syrks + the off-diagonal leaf dots for ATA);
+    ``'batched'`` pays the two batched leaf calls plus O(levels)
+    encode/decode stack ops. 'dense' is the single classical dot.
+    """
+    if algorithm == "dense":
+        return 1
+    if leaf_dispatch == "batched":
+        return 2 + 4 * _levels(op, m, n, k, n_base)
+    if op == "ata":
+        s, g = _ata_leaves(m, n, n_base)
+        return s + g
+    return _strassen_leaves(m, n, k, n_base)
 
 
 def _flop_split(op, algorithm, m, n, k, n_base):
@@ -279,6 +359,7 @@ def predict_seconds(
     devices: int = 1,
     nb: Optional[int] = None,
     tile_w: Optional[int] = None,
+    leaf_dispatch: str = "unrolled",
 ) -> float:
     """Roofline prediction for one candidate configuration.
 
@@ -288,6 +369,14 @@ def predict_seconds(
     branch) the output term becomes the tile schedule's *retrieval* payload
     (:func:`retrieval_bytes`) — packed tile stack vs replicated dense
     square — for the ``nb``/``tile_w`` stripe tiling.
+
+    ``leaf_dispatch`` moves two terms in opposite directions: ``'unrolled'``
+    pays :func:`dispatch_calls` × ``launch_overhead_s`` (one dispatched op
+    per leaf — the term that was silently zero before and made tiny-leaf
+    recursions look free); ``'batched'`` pays O(levels) calls but its
+    operand-combination adds are *materialized* stacks the leaf dot then
+    re-reads, so its add traffic is charged a full write+read (2.0 words)
+    instead of the fused ``add_word_cost``.
     """
     mach = machine or machine_for(backend)
     itemsize = _ITEMSIZE.get(dtype, 4)
@@ -304,7 +393,11 @@ def predict_seconds(
     bn = min(bn, max(d_base, 1))
     bk = min(bk, max(d_base, 1))
     stream_bytes = (mult / 2) * (1.0 / bn + 1.0 / bk) * itemsize
-    add_bytes = mach.add_word_cost * adds * itemsize
+    add_word_cost = (
+        2.0 if leaf_dispatch == "batched" and algorithm != "dense"
+        else mach.add_word_cost
+    )
+    add_bytes = add_word_cost * adds * itemsize
     if devices > 1 and op == "ata":
         if nb is None or tile_w is None:
             nb, tile_w = distributed_tiling(
@@ -314,7 +407,11 @@ def predict_seconds(
     else:
         out_bytes = _output_bytes(op, out, n, k, packed_block, itemsize)
     memory_s = b * (stream_bytes + add_bytes + out_bytes) / mach.hbm_bw
-    return max(compute_s, memory_s)
+    overhead_s = (
+        dispatch_calls(op, algorithm, m, n, k, n_base, leaf_dispatch)
+        * mach.launch_overhead_s
+    )
+    return max(compute_s, memory_s) + overhead_s
 
 
 # ---------------------------------------------------------------------------
@@ -388,26 +485,32 @@ def candidates(
     seen_degenerate = False
     for algo in algos:
         for n_base in n_bases if algo != "dense" else [defaults.DEFAULT_N_BASE]:
-            if algo != "dense" and min(m, n, k) <= n_base:
-                # recursion bottoms out immediately — all such cutoffs are
-                # the same dispatch; keep one canonical representative.
+            lds = ("unrolled", "batched")
+            if algo == "dense":
+                lds = ("unrolled",)  # one classical dot — nothing to batch
+            elif min(m, n, k) <= n_base:
+                # recursion bottoms out immediately — all such cutoffs (and
+                # both leaf dispatches: one leaf IS one call) are the same
+                # dispatch; keep one canonical representative.
                 if seen_degenerate:
                     continue
                 seen_degenerate = True
-            pred = predict_seconds(
-                op, algo, m, n, k, n_base,
-                batch=batch, dtype=dtype, out="dense", machine=mach,
-                blocks=base_tile,
-            )
-            scored.append((pred, algo, n_base))
+                lds = ("unrolled",)
+            for ld in lds:
+                pred = predict_seconds(
+                    op, algo, m, n, k, n_base,
+                    batch=batch, dtype=dtype, out="dense", machine=mach,
+                    blocks=base_tile, leaf_dispatch=ld,
+                )
+                scored.append((pred, algo, n_base, ld))
     scored.sort(key=lambda s: s[0])
 
     plans = []
-    for pred, algo, n_base in scored:
+    for pred, algo, n_base, ld in scored:
         pred_out = predict_seconds(
             op, algo, m, n, k, n_base,
             batch=batch, dtype=dtype, out=out, machine=mach, blocks=base_tile,
-            devices=devices, nb=nb, tile_w=tile_w,
+            devices=devices, nb=nb, tile_w=tile_w, leaf_dispatch=ld,
         )
         plans.append(
             Plan(
@@ -416,6 +519,7 @@ def candidates(
                 packed_block=defaults.DEFAULT_PACKED_BLOCK,
                 use_kernels=mach.kernels,
                 syrk_blocks=syrk_bs, gemm_blocks=gemm_bs,
+                leaf_dispatch=ld,
                 devices=devices, nb=nb, tile_w=tile_w,
                 source="analytic", predicted_s=pred_out,
             )
@@ -459,6 +563,7 @@ def default_plan(
         packed_block=defaults.DEFAULT_PACKED_BLOCK,
         use_kernels=mach.kernels,
         syrk_blocks=defaults.SYRK_BLOCKS, gemm_blocks=defaults.GEMM_BLOCKS,
+        leaf_dispatch=defaults.DEFAULT_LEAF_DISPATCH,
         devices=devices, nb=nb, tile_w=tile_w, source="default",
     )
 

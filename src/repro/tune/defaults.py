@@ -20,6 +20,7 @@ __all__ = [
     "SYRK_BLOCKS",
     "GEMM_BLOCKS",
     "DEFAULT_VARIANT",
+    "DEFAULT_LEAF_DISPATCH",
     "TARGET_TILES_PER_DEVICE",
     "N_BASE_CANDIDATES",
     "SYRK_BLOCK_CANDIDATES",
@@ -44,6 +45,13 @@ GEMM_BLOCKS = (512, 256, 256)
 # Strassen variant for the off-diagonal products when nothing chose one:
 # 'strassen' is the paper-faithful schedule (7 mults / 18 adds).
 DEFAULT_VARIANT = "strassen"
+
+# How the recursion's leaf products reach the hardware when nothing chose:
+# 'unrolled' emits one dot/syrk per leaf (the historical trace-time form);
+# 'batched' runs the whole tree level-synchronously — every leaf in one
+# batched call (bitwise-equal output; the planner prices the difference as
+# per-call launch/graph overhead and picks per shape).
+DEFAULT_LEAF_DISPATCH = "unrolled"
 
 # Distributed tile schedule: how many lower-triangle tiles the tiling
 # search aims to give each device of the task axis (balance ↔ tile width).

@@ -184,5 +184,5 @@ def autotune(
 def _same_dispatch(a: cost.Plan, b: cost.Plan) -> bool:
     """True when two plans dispatch identically (tunables equal)."""
     keys = ("algorithm", "n_base", "packed_block", "use_kernels",
-            "syrk_blocks", "gemm_blocks", "nb", "tile_w")
+            "syrk_blocks", "gemm_blocks", "leaf_dispatch", "nb", "tile_w")
     return all(getattr(a, f) == getattr(b, f) for f in keys)

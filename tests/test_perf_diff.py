@@ -1,0 +1,46 @@
+"""Bench-mode perf diff (`analysis.perf_diff.bench_diff`): the report-only
+fresh-vs-committed table `benchmarks/run.py` prints after every module."""
+
+from repro.analysis.perf_diff import bench_diff, print_bench_diff
+
+
+def test_bench_diff_matches_by_name_and_flags_metadata():
+    base = [
+        {"name": "a", "seconds": 1.0, "backend": "cpu", "jax_version": "0.4.37"},
+        {"name": "gone", "seconds": 9.0},
+        {"no_name": True},
+    ]
+    fresh = [
+        {"name": "a", "seconds": 2.0, "backend": "tpu", "jax_version": "0.4.37"},
+        {"name": "new_row", "seconds": 3.0},
+    ]
+    recs = bench_diff(base, fresh)
+    assert [r["name"] for r in recs] == ["a", "new_row"]
+    a, new = recs
+    assert a["delta_pct"] == 100.0
+    # only the keys that actually disagree; absent keys are not mismatches
+    assert a["meta_changed"] == ["backend"]
+    assert new["base_s"] is None and new["delta_pct"] is None
+
+
+def test_bench_diff_pre_metadata_baselines_stay_comparable():
+    """Committed baselines predate the backend-metadata satellite; their
+    rows must diff cleanly (no mismatch flags for absent keys)."""
+    base = [{"name": "a", "seconds": 1.0}]
+    fresh = [{"name": "a", "seconds": 0.5, "backend": "cpu", "interpret": True}]
+    (rec,) = bench_diff(base, fresh)
+    assert rec["delta_pct"] == -50.0 and rec["meta_changed"] == []
+
+
+def test_print_bench_diff_never_raises_on_marker_rows():
+    """Zero-seconds baselines (marker rows like tune_cache_file) produced a
+    None delta — the printer must render them, not TypeError (regression)."""
+    base = [{"name": "marker", "seconds": 0.0}]
+    fresh = [{"name": "marker", "seconds": 0.1}]
+    lines = []
+    print_bench_diff("x", bench_diff(base, fresh), print_fn=lines.append)
+    assert any("n/a" in ln for ln in lines)
+    # empty record list prints nothing at all
+    lines2 = []
+    print_bench_diff("x", [], print_fn=lines2.append)
+    assert lines2 == []
