@@ -1,0 +1,142 @@
+"""Normal-equations time-to-solution: packed ``solve.lstsq`` vs baselines.
+
+The paper frames ``AᵀA`` as "an intermediate operation in the solution of
+a wide set of problems"; this bench measures the whole solution, on the
+fig-3 shape grid:
+
+  * ``packed``  — ``solve.lstsq``: planned ``ata(out='packed')`` → packed
+    blocked Cholesky → two packed substitutions (the repro.solve pipeline;
+    no dense ``(n, n)`` anywhere);
+  * ``dense_chol`` — the classical normal-equations baseline: one dense
+    gram + ``jnp.linalg.cholesky`` + ``cho_solve``-style triangular
+    solves (what a user writes without the packed stack);
+  * ``jnp_lstsq`` — ``jnp.linalg.lstsq`` (SVD-based; the robustness
+    gold standard, expected slowest) — skipped at the largest shapes in
+    smoke mode;
+  * ``cg``      — the planner's matrix-free alternative, recorded with its
+    iteration budget for the shape.
+
+Packed vs dense-Cholesky runs interleaved (``time_pair``) — their ratio is
+the claim under test. Derived columns report residual parity: every method
+must reach the dense baseline's residual within fp tolerance, so the
+speedup rows compare equal-quality solutions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, smoke, time_fn, time_pair
+from repro import solve, tune
+from repro.core.reference import (
+    blocked_potrf_flops,
+    classical_syrk_flops,
+    trsm_flops,
+)
+
+
+def _residual(a, b, x):
+    r = a @ x - b
+    return float(jnp.linalg.norm(r) / jnp.linalg.norm(b))
+
+
+def run():
+    rng = np.random.default_rng(0)
+    shapes = [(512, 512), (1024, 1024), (2048, 2048), (4096, 1024), (2048, 512)]
+    if smoke():
+        shapes = [(512, 512), (1024, 1024)]
+    rhs = 16
+    ridge = 1e-4
+
+    for m, n in shapes:
+        a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((m, rhs)), jnp.float32)
+
+        plan = tune.plan(op="solve", m=m, n=n, k=rhs, out="packed")
+        # the packed row measures the FACTOR pipeline even where the
+        # planner's argmin is CG (recorded as planner_method) — the cg row
+        # already covers that dispatch, and the packed-vs-dense-Cholesky
+        # ratio is only meaningful between two factorizations.
+        fplan = dataclasses.replace(plan, method="factor")
+        f_packed = jax.jit(lambda a, b: solve.lstsq(a, b, ridge=ridge, plan=fplan))
+
+        def dense_chol(a, b):
+            g = jax.lax.dot_general(
+                a, a, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) + ridge * jnp.eye(n, dtype=jnp.float32)
+            l = jnp.linalg.cholesky(g)
+            y = jax.lax.linalg.triangular_solve(
+                l, a.T @ b, left_side=True, lower=True
+            )
+            return jax.lax.linalg.triangular_solve(
+                l, y, left_side=True, lower=True, transpose_a=True
+            )
+
+        f_dense = jax.jit(dense_chol)
+        f_cg = jax.jit(lambda a, b: solve.lstsq(a, b, ridge=ridge, method="cg"))
+
+        # packed vs dense-Cholesky interleaved: the ratio is the claim.
+        t_packed, t_dense = time_pair(f_packed, f_dense, a, b)
+        t_cg = time_fn(f_cg, a, b)
+        x_p, x_d, x_c = f_packed(a, b), f_dense(a, b), f_cg(a, b)
+        res_p, res_d, res_c = (_residual(a, b, x) for x in (x_p, x_d, x_c))
+
+        solve_flops = (
+            classical_syrk_flops(m, n)
+            + blocked_potrf_flops(n, plan.packed_block)
+            + 2 * trsm_flops(n, rhs)
+        )
+        emit(
+            f"solve_lstsq_packed_{m}x{n}",
+            t_packed,
+            f"gflops={solve_flops / t_packed / 1e9:.2f} "
+            f"vs_dense_chol={t_dense / t_packed:.3f} vs_cg={t_cg / t_packed:.3f} "
+            f"residual={res_p:.2e} planner_method={plan.method}",
+            shape=(m, n),
+            gflops=solve_flops / t_packed / 1e9,
+            mode="packed",
+            rhs=rhs,
+            dense_seconds=t_dense,
+            cg_seconds=t_cg,
+            packed_vs_dense_speedup=round(t_dense / t_packed, 4),
+            residual=res_p,
+            residual_dense=res_d,
+            planner_method=plan.method,
+            algorithm=plan.algorithm,
+            n_base=plan.n_base,
+            packed_block=plan.packed_block,
+        )
+        emit(
+            f"solve_cg_{m}x{n}",
+            t_cg,
+            f"vs_packed={t_packed / t_cg:.3f} residual={res_c:.2e}",
+            shape=(m, n),
+            mode="cg",
+            rhs=rhs,
+            residual=res_c,
+        )
+
+        # SVD gold standard — heavy; in smoke mode only at the smallest shape
+        if not smoke() or (m, n) == shapes[0]:
+            f_svd = jax.jit(lambda a, b: jnp.linalg.lstsq(a, b)[0])
+            t_svd = time_fn(f_svd, a, b, iters=3, warmup=1)
+            res_s = _residual(a, b, f_svd(a, b))
+            emit(
+                f"solve_jnp_lstsq_{m}x{n}",
+                t_svd,
+                f"vs_packed={t_packed / t_svd:.3f} residual={res_s:.2e}",
+                shape=(m, n),
+                mode="jnp_lstsq",
+                rhs=rhs,
+                packed_seconds=t_packed,
+                residual=res_s,
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -39,6 +39,7 @@ BENCHES = [
     ("kernels_pallas", "benchmarks.bench_kernels", "kernels"),
     ("shampoo_integration", "benchmarks.bench_shampoo", "shampoo"),
     ("tune_planner", "benchmarks.bench_tune", "tune"),
+    ("solve_normal_equations", "benchmarks.bench_solve", "solve"),
 ]
 
 # multi-process device sweeps — too slow for the CI smoke job.

@@ -3,8 +3,9 @@
 Covers: the ``repro.tune.plan`` front door (plan → ata → packed result —
 the documented entry point), plain ``alpha·AᵀA`` vs the classical product,
 the rectangular FastStrassen ``AᵀB``, flop accounting (the paper's
-2/3-of-Strassen claim), a normal-equations solve, and the Pallas kernel
-base case.
+2/3-of-Strassen claim), packed-native least squares (plan → ata →
+``solve.lstsq`` — the gram is factored and solved without ever being
+densified), and the Pallas kernel base case.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import tune
+from repro import solve, tune
 from repro.core import ata, strassen_tn
 from repro.core.reference import (
     ata_flops,
@@ -67,12 +68,17 @@ def main():
     print(f"flops @ n=16384 (planned n_base={nb}): ATA/Strassen = "
           f"{r_strassen:.3f} (→ 2/3), ATA/classical-syrk = {r_classic:.3f}")
 
-    # --- 5. application: least squares via normal equations ----------------
+    # --- 5. application: packed-native least squares (repro.solve) ---------
+    # The ten-line front door: the planner prices factor-vs-CG for this
+    # shape/RHS count, the gram comes out of the planned ata packed, the
+    # Cholesky factors it in place, and two packed substitutions finish —
+    # no dense (771, 771) matrix exists anywhere in the pipeline.
     x_true = rng.standard_normal(771).astype(np.float32)
     y = a @ x_true + 0.01 * rng.standard_normal(1537).astype(np.float32)
-    gram = ata(a, plan=p) + 1e-4 * jnp.eye(771)
-    x_hat = jnp.linalg.solve(gram, a.T @ y)
-    print(f"normal equations: ||x̂ − x||/||x|| = "
+    sp = tune.plan(op="solve", m=1537, n=771, k=1, out="packed")
+    x_hat = solve.lstsq(a, y, ridge=1e-4, plan=sp)
+    print(f"solve.lstsq (method={sp.method}, algorithm={sp.algorithm}): "
+          f"||x̂ − x||/||x|| = "
           f"{float(jnp.linalg.norm(x_hat - x_true) / jnp.linalg.norm(x_true)):.3e}")
 
     # --- 6. Pallas kernels as the recursion base case -----------------------

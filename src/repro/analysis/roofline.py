@@ -45,6 +45,10 @@ __all__ = [
     "render_markdown",
     "syrk_write_traffic",
     "syrk_write_seconds",
+    "potrf_write_traffic",
+    "trsm_write_traffic",
+    "normal_eq_write_traffic",
+    "normal_eq_write_seconds",
     "PEAK_FLOPS",
     "HBM_BW",
     "LINK_BW",
@@ -88,6 +92,62 @@ def syrk_write_traffic(n: int, bn: int, mode: str, itemsize: int = 4) -> int:
 def syrk_write_seconds(n: int, bn: int, mode: str, itemsize: int = 4) -> float:
     """Write-traffic seconds on the HBM roofline (v5e model)."""
     return syrk_write_traffic(n, bn, mode, itemsize) / HBM_BW
+
+
+def potrf_write_traffic(n: int, bn: int, mode: str = "packed",
+                        itemsize: int = 4) -> int:
+    """HBM bytes written by the blocked Cholesky of an ``n × n`` gram.
+
+    The factor walk overwrites exactly the block grid it reads:
+
+      * ``'packed'`` — the packed factor stores the ``T = nb(nb+1)/2``
+        lower tiles and nothing else:                       ``T·bn²``.
+      * ``'dense'``  — a dense factorization writes the full square
+        (LAPACK-style, upper zeroed):                       ``(nb·bn)²``.
+
+    Same ``(nb+1)/2nb → 1/2`` ratio as the gram itself — the storage half
+    of the paper's symmetry claim carries through the factorization.
+    """
+    nb = -(-n // bn)
+    tile = bn * bn * itemsize
+    if mode == "packed":
+        return nb * (nb + 1) // 2 * tile
+    if mode == "dense":
+        return nb * nb * tile
+    raise ValueError(f"unknown potrf output mode {mode!r}")
+
+
+def trsm_write_traffic(n: int, r: int, itemsize: int = 4) -> int:
+    """HBM bytes written by one triangular substitution pass: the solution
+    panel, ``n·r`` words (the factor is read, not written)."""
+    return n * r * itemsize
+
+
+def normal_eq_write_traffic(n: int, bn: int, r: int, *, mode: str = "packed",
+                            itemsize: int = 4) -> int:
+    """Write bytes of the post-gram normal-equations tail: factor the
+    ``n × n`` gram in place (``potrf_write_traffic``) and run the two
+    substitution passes (``2·n·r``). Add ``syrk_write_traffic`` for the
+    gram itself to price the full ``ata → factor → solve`` pipeline —
+    the dryrun gram sweep and ``tune.cost``'s op='solve' entry both do.
+    """
+    return (
+        potrf_write_traffic(n, bn, mode, itemsize)
+        + 2 * trsm_write_traffic(n, r, itemsize)
+    )
+
+
+def normal_eq_write_seconds(n: int, bn: int, r: int, *, mode: str = "packed",
+                            itemsize: int = 4) -> float:
+    """Full-pipeline (gram + factor + substitutions) write seconds on the
+    HBM roofline: ``syrk_write_traffic`` of the matching gram mode plus
+    :func:`normal_eq_write_traffic`."""
+    gram_mode = "packed" if mode == "packed" else "dual"
+    total = (
+        syrk_write_traffic(n, bn, gram_mode, itemsize)
+        + normal_eq_write_traffic(n, bn, r, mode=mode, itemsize=itemsize)
+    )
+    return total / HBM_BW
 
 
 def _cost_vec(artifact: dict) -> dict:

@@ -11,6 +11,16 @@ paper's cost model (Section 3.2):
   * Strassen ``AᵀB``:          recursive counter matching our cutoff.
   * ATA ``AᵀA``:               recursive counter; paper Eq. (3):
                                ``T(n) = 4T(n/2) + 2T_S(n/2) + 3(n/2)² ≈ (2/3)T_S``.
+  * Cholesky ``A = L·Lᵀ``:     ``potrf_flops`` (unblocked, symmetric-aware)
+                               and ``blocked_potrf_flops`` — the exact walk
+                               of ``repro.solve.cholesky`` over the packed
+                               block grid (diag potrf + panel trsm + Schur
+                               updates, padded tail blocks counted as the
+                               graph executes them).
+  * triangular solve:          ``trsm_flops`` — one triangular solve against
+                               an ``n × n`` factor with ``r`` right-hand
+                               sides (``n²·r`` flops; both the factorization
+                               panels and the solve phase are this shape).
 
 The counters walk the *same* recursion (same floor/ceil splits, same cutoff)
 as the implementations, so they are exact for any rectangular shape, not just
@@ -30,6 +40,10 @@ __all__ = [
     "classical_gemm_flops",
     "strassen_tn_flops",
     "ata_flops",
+    "potrf_flops",
+    "trsm_flops",
+    "blocked_potrf_flops",
+    "cg_iteration_flops",
 ]
 
 
@@ -90,6 +104,65 @@ def strassen_tn_flops_winograd(m: int, n: int, k: int, n_base: int) -> int:
     # Winograd: 4 A-side pre-additions, 4 B-side pre-additions, 7 combine adds.
     adds = 4 * m2 * n2 + 4 * m2 * k2 + 7 * n2 * k2
     return mults + adds
+
+
+def potrf_flops(n: int) -> int:
+    """Exact flops of the unblocked right-looking Cholesky of an ``n × n``
+    SPD matrix, symmetric-aware (only the lower triangle is updated).
+
+    Per column ``j`` (0-based): one sqrt, ``n−1−j`` divisions, and the
+    rank-1 Schur update of the trailing lower triangle —
+    ``(n−1−j)(n−j)/2`` entries at 2 flops (multiply + subtract) each.
+    Total ``n³/3 + O(n²)`` — the classical LAPACK ``potrf`` count.
+    """
+    total = 0
+    for j in range(n):
+        t = n - 1 - j
+        total += 1 + t + t * (t + 1)
+    return total
+
+
+def trsm_flops(n: int, r: int) -> int:
+    """Exact flops of one triangular solve ``X·Lᵀ = B`` (equivalently
+    ``L·Y = C``) against an ``n × n`` triangular factor with ``r``
+    right-hand sides: column ``j`` costs ``r·(2j + 1)`` flops (a length-j
+    accumulated dot per rhs plus the diagonal division) — total ``n²·r``.
+    """
+    return n * n * r
+
+
+def blocked_potrf_flops(n: int, bn: int) -> int:
+    """Exact flops of the packed blocked Cholesky (``repro.solve.cholesky``).
+
+    Walks the identical ``nb = ⌈n/bn⌉`` block-column loop the implementation
+    traces — padded tail blocks are full ``bn`` blocks there (the pad region
+    factors as identity), so they are counted at full size here, exactly as
+    the compiled graph executes them. Per block column ``j``: the diagonal
+    Schur updates (``j`` NT block products, counted full — the implementation
+    computes full ``bn×bn`` tiles), one ``potrf(bn)``, the panel Schur
+    updates (``(nb−1−j)·j`` block products) and ``nb−1−j`` panel
+    ``trsm(bn, bn)``.
+    """
+    nb = -(-n // bn)
+    gemm = classical_gemm_flops(bn, bn, bn)  # one bn×bn NT block product
+    total = 0
+    for j in range(nb):
+        rows = nb - 1 - j
+        total += j * gemm                      # diagonal Schur update
+        total += potrf_flops(bn)               # diagonal factorization
+        total += rows * j * gemm               # panel Schur updates
+        total += rows * trsm_flops(bn, bn)     # panel solves
+    return total
+
+
+def cg_iteration_flops(m: int, n: int, r: int) -> int:
+    """Exact flops of one CG iteration on the gram *operator*
+    ``x ↦ Aᵀ(A·x) + λx`` with ``r`` simultaneous right-hand sides:
+    the two planned TN products (``2mnr`` each — ``A·p`` then ``Aᵀ(Ap)``)
+    plus the ridge axpy and the 5 length-``n·r`` vector updates/dots of the
+    textbook iteration.
+    """
+    return 2 * classical_gemm_flops(m, n, r) + 12 * n * r
 
 
 @functools.lru_cache(maxsize=None)

@@ -42,6 +42,8 @@ import numpy as np
 __all__ = [
     "SymmetricMatrix",
     "tri_block_indices",
+    "diag_block_indices",
+    "col_panel_indices",
     "default_block_size",
     "sym_tile",
     "write_packed_region",
@@ -103,6 +105,21 @@ def write_packed_region(buf, arr, r0, c0, bn):
             c = c_end
         r = r_end
     return buf
+
+
+def diag_block_indices(nb: int):
+    """Packed indices of the ``nb`` diagonal blocks: ``t = i(i+1)/2 + i``."""
+    return np.array([i * (i + 1) // 2 + i for i in range(nb)], np.int32)
+
+
+def col_panel_indices(nb: int, j: int):
+    """Packed indices of block column ``j`` *below* the diagonal —
+    ``t = i(i+1)/2 + j`` for ``i = j+1 … nb−1``, the panel the blocked
+    Cholesky walk (`repro.solve.cholesky`) factors against diagonal ``j``.
+    """
+    return np.array(
+        [i * (i + 1) // 2 + j for i in range(j + 1, nb)], np.int32
+    )
 
 
 def tri_block_indices(nb: int):
@@ -308,10 +325,50 @@ class SymmetricMatrix:
             fn = jax.vmap(fn)
         return fn(self.blocks)
 
+    # -- block views (the packed factor walk of repro.solve reads these) ----
+
+    @staticmethod
+    def block_index(i: int, j: int) -> int:
+        """Packed index of block ``(i, j)`` — row-major lower enumeration."""
+        if j > i:
+            raise ValueError(f"block ({i}, {j}) lies in the upper triangle")
+        return i * (i + 1) // 2 + j
+
+    def block(self, i: int, j: int):
+        """The ``(..., bn, bn)`` tile of block-grid position ``(i, j)``,
+        ``j ≤ i`` — a pure static slice of the packed storage."""
+        return self.blocks[..., self.block_index(i, j), :, :]
+
+    def diag_blocks(self):
+        """All diagonal tiles as one ``(..., nb, bn, bn)`` stack."""
+        return self.blocks[..., diag_block_indices(self.nb), :, :]
+
+    def col_panel(self, j: int):
+        """Block column ``j`` below the diagonal: ``(..., nb−1−j, bn, bn)``
+        (empty stack for the last column). This is the panel the blocked
+        Cholesky factors with one batched trsm launch."""
+        idx = col_panel_indices(self.nb, j)
+        return self.blocks[..., idx, :, :]
+
+    def add_scaled_identity(self, s) -> "SymmetricMatrix":
+        """``self + s·I`` on the *logical* diagonal (pad entries beyond
+        ``n`` untouched), packed-native: only the ``nb`` diagonal tiles are
+        updated, via a static numpy mask — no dense ``(n, n)`` anywhere."""
+        nb, bn, n = self.nb, self.bn, self.n
+        diag_t = diag_block_indices(nb)
+        mask = np.zeros((nb, bn, bn), np.float32)
+        for i in range(nb):
+            d = min(bn, n - i * bn)
+            mask[i, range(d), range(d)] = 1.0
+        tiles = self.diag_blocks() + s * jnp.asarray(mask, self.blocks.dtype)
+        return SymmetricMatrix(
+            self.blocks.at[..., diag_t, :, :].set(tiles), self.n, self.bn
+        )
+
     def diagonal(self):
         """The main diagonal of the logical matrix, ``(..., n)``."""
         nb, bn, n = self.nb, self.bn, self.n
-        diag_t = np.array([i * (i + 1) // 2 + i for i in range(nb)], np.int32)
+        diag_t = diag_block_indices(nb)
         tiles = self.blocks[..., diag_t, :, :]          # (..., nb, bn, bn)
         d = jnp.diagonal(tiles, axis1=-2, axis2=-1)      # (..., nb, bn)
         return d.reshape(*self.blocks.shape[:-3], nb * bn)[..., :n]

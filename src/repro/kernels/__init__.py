@@ -4,9 +4,14 @@
   symmetric saving at the tile level).
 * ``gemm_tn``— TN matmul ``alpha·AᵀB`` (FastStrassen base case; Aᵀ never
   materialized).
+* ``potrf``  — diagonal-block Cholesky (packed-solver base case: one SPD
+  ``bn×bn`` tile → its lower factor).
+* ``trsm``   — triangular panel solve ``X·Lᵀ = B`` / ``X·L = B`` (the
+  blocked-Cholesky panel op and the substitution engine of
+  ``repro.solve``).
 
-Two package-wide contracts, stated here once and honored by BOTH kernels
-(``repro.kernels.syrk``, ``repro.kernels.gemm_tn``) and their public
+Two package-wide contracts, stated here once and honored by ALL FOUR
+kernels (``repro.kernels.{syrk, gemm_tn, potrf, trsm}``) and their public
 wrappers (``repro.kernels.ops``):
 
 * **Interpret mode** (``ops.interpret_default()``): ``interpret=None`` at a
@@ -21,13 +26,16 @@ wrappers (``repro.kernels.ops``):
   recursion (``Plan.leaf_dispatch='batched'``) relies on this: it flattens
   its leaf stack (and any operand batch) into exactly that one leading dim,
   so all ``7^L`` Strassen leaves / all ``4^L`` diagonal leaves land in a
-  single launch.
+  single launch. The packed Cholesky walk (``repro.solve.cholesky``) leans
+  on the same contract: each block column factors its whole panel stack —
+  batch dims × panel rows — as ONE ``trsm`` launch, and a batched stat
+  stack's diagonal tiles as ONE ``potrf`` launch.
 
 ``ops`` holds the jit'd public wrappers; ``ref`` holds the pure-jnp oracles
 used by the kernel test sweeps.
 """
 
 from repro.kernels import ops, ref
-from repro.kernels.ops import gemm_tn, syrk
+from repro.kernels.ops import gemm_tn, potrf, syrk, trsm
 
-__all__ = ["ops", "ref", "gemm_tn", "syrk"]
+__all__ = ["ops", "ref", "gemm_tn", "syrk", "potrf", "trsm"]

@@ -18,10 +18,12 @@ import jax.numpy as jnp
 
 from repro.kernels.gemm_tn import DEFAULT_BLOCKS as GEMM_BLOCKS
 from repro.kernels.gemm_tn import gemm_tn_pallas
+from repro.kernels.potrf import potrf_pallas
 from repro.kernels.syrk import DEFAULT_BLOCKS as SYRK_BLOCKS
 from repro.kernels.syrk import syrk_pallas
+from repro.kernels.trsm import trsm_pallas
 
-__all__ = ["syrk", "gemm_tn", "interpret_default"]
+__all__ = ["syrk", "gemm_tn", "potrf", "trsm", "interpret_default"]
 
 
 def interpret_default() -> bool:
@@ -100,3 +102,32 @@ def gemm_tn(
         interpret=interpret,
         out_dtype=out_dtype,
     )
+
+
+def potrf(a, *, interpret=None, out_dtype=jnp.float32):
+    """Lower Cholesky factor of SPD tile(s) via the Pallas potrf kernel.
+
+    Accepts ``(n, n)`` or a stacked ``(B, n, n)`` — the stack runs as the
+    leading grid dimension, one launch for the whole batch (the
+    ``repro.kernels`` batched-grid contract: a batched Shampoo stat stack
+    factors its diagonal blocks in ONE launch per block column).
+    ``interpret=None`` resolves via :func:`interpret_default`.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    return potrf_pallas(a, interpret=interpret, out_dtype=out_dtype)
+
+
+def trsm(l, b, *, transpose=True, interpret=None, out_dtype=jnp.float32):
+    """Triangular panel solve ``X·Lᵀ = B`` (or ``X·L = B``) via the Pallas
+    trsm kernel — the blocked-Cholesky panel op and the building block of
+    the packed forward/backward substitution (``repro.solve.triangular``).
+
+    Accepts ``(n, n) × (m, n)`` or stacked ``(B, n, n) × (B, m, n)`` — the
+    stack is the leading grid dimension, one launch per panel stack.
+    ``interpret=None`` resolves via :func:`interpret_default`.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    return trsm_pallas(l, b, transpose=transpose, interpret=interpret,
+                       out_dtype=out_dtype)

@@ -298,6 +298,12 @@ def _gram_artifacts(mesh, *, m=65536, n=16384, n_base=None):
     and stripe count come from the repro.tune planner; the §Perf knob
     variants sweep the planner's neighboring candidates (one cutoff step
     down, two extra stripes) instead of hardcoded values.
+
+    The gram record also carries an analytic ``normal_eq_model`` block
+    (see ``run_cell``): the full normal-equations pipeline — gram +
+    packed Cholesky factor + two substitutions — priced on the v5e write
+    roofline (``analysis.roofline.normal_eq_write_seconds``), packed vs
+    dense, so the sweep prices time-to-*solution*, not just the multiply.
     """
     from repro import tune
     from repro.core.distributed import ata_tile_parallel
@@ -370,6 +376,31 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         try:
             m, n = (int(x) for x in shape_name.split("x"))
             rec["artifacts"] = _gram_artifacts(mesh, m=m, n=n)
+            # analytic full-pipeline pricing (paper's "time to solution"):
+            # the gram sweep's write roofline extended by the potrf/trsm
+            # traffic of the packed normal-equations tail, per RHS count.
+            from repro.analysis import roofline as _rl
+            from repro.core.symmetric import default_block_size as _dbs
+            from repro.tune.defaults import DEFAULT_PACKED_BLOCK as _PB
+
+            bn = _dbs(n, _PB)
+            rec["normal_eq_model"] = {
+                "packed_block": bn,
+                "rhs": {
+                    str(r): {
+                        "packed_write_s": _rl.normal_eq_write_seconds(
+                            n, bn, r, mode="packed"
+                        ),
+                        "dense_write_s": _rl.normal_eq_write_seconds(
+                            n, bn, r, mode="dense"
+                        ),
+                        "factor_tail_bytes": _rl.normal_eq_write_traffic(
+                            n, bn, r
+                        ),
+                    }
+                    for r in (1, 16, 128)
+                },
+            }
             rec["status"] = "ok"
         except Exception as e:
             rec.update(status="error", error=f"{type(e).__name__}: {e}",

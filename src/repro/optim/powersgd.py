@@ -50,14 +50,29 @@ def init_state(key, shape, rank: int) -> PowerSGDState:
     return PowerSGDState(q=q, error=jnp.zeros((m, n), jnp.float32))
 
 
-def _whiten(p: jax.Array, g: jax.Array, eps: float = 1e-6) -> jax.Array:
+def _whiten(p: jax.Array, g, eps: float = 1e-6) -> jax.Array:
     """Whiten columns of p given its gram ``g = PᵀP`` (p ← p·L⁻ᵀ).
 
     The ridge scales with trace(g)/r so rank-deficient P (more compression
     rank than gradient rank) stays finite: null-space columns collapse to
     ~eps-scaled noise and contribute nothing to the reconstruction.
+
+    ``g`` may be the packed :class:`~repro.core.SymmetricMatrix` straight
+    off ``gram_rowshard(out='packed')`` — the Cholesky and the solve then
+    run packed-native (``repro.solve``), so the gram is never densified on
+    any device (the last consumer-side dense hole of the packed retrieval
+    path).
     """
+    from repro.core.symmetric import SymmetricMatrix
+
     r = p.shape[1]
+    if isinstance(g, SymmetricMatrix):
+        from repro.solve import cholesky, solve_triangular
+
+        ridge = eps * (g.trace() / r + 1e-30) + 1e-30
+        f = cholesky(g.add_scaled_identity(ridge))
+        # p·L⁻ᵀ: solve X·Lᵀ = P  ⇔  L·Xᵀ = Pᵀ (forward, packed factor)
+        return solve_triangular(f, p.T, transpose=False).T
     ridge = eps * (jnp.trace(g) / r + 1e-30) + 1e-30
     g = g + ridge * jnp.eye(r, dtype=g.dtype)
     l = jnp.linalg.cholesky(g)
@@ -119,7 +134,7 @@ def compress_sharded(
     gram = gram_rowshard(
         p_local, axis, n_base=n_base, out="packed", packed_block=packed_block
     )
-    p_local = _whiten(p_local, gram.to_dense())            # (r, r) densify only
+    p_local = _whiten(p_local, gram)       # packed Cholesky — never densified
     q = jax.lax.psum(
         strassen_tn(g_local, p_local, n_base=n_base), axis  # GᵀP row-shard sum
     )

@@ -40,6 +40,20 @@ inverse p-th roots (p = 4 for 2-D blocks) refreshed every
 ``update_every`` steps under ``lax.cond``, Adam grafting for step size,
 first-moment momentum on the grafted preconditioned update, and Adam
 fallback for 1-D/scalar/embedding parameters.
+
+``precond_p=2`` selects the **whitening** preconditioner (exponent −1/2 on
+each gram stat): instead of Newton-iterated inverse roots, the refresh
+factors the decayed stats — **packed Cholesky directly on the
+SymmetricMatrix stacks** (``repro.solve.cholesky``; the stats are never
+densified, closing the last dense ``O(n²)`` hole of the packed-grams
+path) — and the update applies the factors as two packed triangular
+solves, ``C_L⁻¹·G·C_R⁻ᵀ``. The optimizer state then holds packed
+*factors*, so preconditioner memory halves along with the stats. With
+``packed_grams=False`` the identical math runs densely
+(``jnp.linalg.cholesky`` + ``triangular_solve``) — the two paths agree
+within fp tolerance (tested), which is the packed path's correctness
+anchor. Adam grafting transplants the step size either way, so the
+whitened direction composes with the rest of the optimizer unchanged.
 """
 
 from __future__ import annotations
@@ -54,6 +68,8 @@ import jax.numpy as jnp
 from repro.core.ata import ata_batched
 from repro.core.symmetric import SymmetricMatrix
 from repro.optim.adamw import Optimizer
+from repro.solve.cholesky import CholeskyFactor, cholesky as packed_cholesky
+from repro.solve.triangular import solve_triangular
 
 __all__ = ["shampoo", "inverse_pth_root"]
 
@@ -175,12 +191,22 @@ def shampoo(
     newton_iters: int = 25,
     packed_grams: bool = True,
     gram_block: Optional[int] = None,
+    precond_p: int = 4,
+    precond_ridge: float = 1e-6,
 ) -> Optimizer:
     """ATA-powered blocked Shampoo with Adam grafting.
 
     ``packed_grams`` keeps the L/R gram statistics in packed symmetric form
-    (about half the memory; densified only inside the preconditioner
-    refresh). ``gram_block`` is the packed storage block size.
+    (about half the memory; with ``precond_p=4`` they are densified only
+    inside the preconditioner refresh). ``gram_block`` is the packed
+    storage block size.
+
+    ``precond_p`` selects the preconditioner exponent: 4 (Anil et al.'s
+    inverse 4th roots via coupled Newton) or 2 — the whitening path, where
+    the refresh is a **packed Cholesky** of each stat
+    (``repro.solve.cholesky`` — no densify) and the update applies the
+    factor by two triangular solves. ``precond_ridge`` is the p=2 refresh's
+    relative ridge (scaled by ``trace/n``, like ``inverse_pth_root``'s).
 
     ``n_base``/``variant``/``gram_block`` default to None: the gram
     dispatches are then planned per block shape through ``repro.tune.plan``
@@ -191,6 +217,8 @@ def shampoo(
     beyond normal fp reassociation). Pin ``n_base`` (e.g. via
     ``OptimizerConfig.shampoo_n_base``) for bitwise-reproducible training.
     """
+    if precond_p not in (2, 4):
+        raise ValueError(f"precond_p must be 2 or 4, got {precond_p}")
     if gram_block is None:
         from repro.tune.defaults import DEFAULT_PACKED_BLOCK
 
@@ -214,6 +242,42 @@ def shampoo(
     def _dense(stat):
         return stat.to_dense() if isinstance(stat, SymmetricMatrix) else stat
 
+    # --- p=2 whitening path: packed Cholesky factors, never densified ---
+
+    def _chol_refresh(stat, d):
+        """Cholesky factor of the (relative-)ridged stat — packed in,
+        packed out (the dense branch runs the identical math densely)."""
+        if isinstance(stat, SymmetricMatrix):
+            tr = stat.trace()                                   # (nb,)
+            ridge = precond_ridge * (tr / d + 1e-30) + 1e-30
+            return packed_cholesky(
+                stat.add_scaled_identity(ridge[:, None, None, None])
+            )
+        tr = jnp.trace(stat, axis1=-2, axis2=-1)
+        ridge = precond_ridge * (tr / d + 1e-30) + 1e-30
+        eye = jnp.eye(d, dtype=jnp.float32)
+        return jnp.linalg.cholesky(stat + ridge[:, None, None] * eye)
+
+    def _id_factor(d, nb):
+        """Well-posed init/keep value for a p=2 preconditioner slot."""
+        if packed_grams:
+            return CholeskyFactor.identity(d, gram_block, batch=(nb,))
+        return jnp.stack([jnp.eye(d, dtype=jnp.float32)] * nb)
+
+    def _whiten_apply(cl, gb, cr):
+        """``C_L⁻¹ · G · C_R⁻ᵀ`` — packed triangular solves (or the dense
+        ``lax.linalg.triangular_solve`` twin) on the block batch."""
+        if isinstance(cl, CholeskyFactor):
+            y = solve_triangular(cl, gb, transpose=False)
+            zt = solve_triangular(cr, jnp.swapaxes(y, -1, -2), transpose=False)
+            return jnp.swapaxes(zt, -1, -2)
+        y = jax.lax.linalg.triangular_solve(
+            cl, gb, left_side=True, lower=True
+        )
+        return jax.lax.linalg.triangular_solve(
+            cr, y, left_side=False, lower=True, transpose_a=True
+        )
+
     def _paths(params):
         flat, treedef = jax.tree_util.tree_flatten_with_path(params)
         paths = [jax.tree_util.keystr(k) for k, _ in flat]
@@ -227,12 +291,17 @@ def shampoo(
             if _use_shampoo(path, p.shape):
                 pt = _plan(p.shape, block)
                 nb = pt.n1 * pt.n2
+                if precond_p == 2:
+                    pl0, pr0 = _id_factor(pt.b1, nb), _id_factor(pt.b2, nb)
+                else:
+                    pl0 = jnp.stack([jnp.eye(pt.b1, dtype=jnp.float32)] * nb)
+                    pr0 = jnp.stack([jnp.eye(pt.b2, dtype=jnp.float32)] * nb)
                 stats.append(
                     {
                         "l": _zeros_stat(pt.b1, nb),
                         "r": _zeros_stat(pt.b2, nb),
-                        "pl": jnp.stack([jnp.eye(pt.b1, dtype=jnp.float32)] * nb),
-                        "pr": jnp.stack([jnp.eye(pt.b2, dtype=jnp.float32)] * nb),
+                        "pl": pl0,
+                        "pr": pr0,
                         "mom": jnp.zeros_like(p, dtype=jnp.float32),
                     }
                 )
@@ -287,22 +356,32 @@ def shampoo(
             l = stat_decay * s["l"] + (1 - stat_decay) * l_new
             r = stat_decay * s["r"] + (1 - stat_decay) * r_new
 
-            def _refresh(l=l, r=r):
-                # densify only here — once per `update_every` steps
-                pl = jax.vmap(lambda x: inverse_pth_root(x, 4, newton_iters))(
-                    _dense(l)
-                )
-                pr = jax.vmap(lambda x: inverse_pth_root(x, 4, newton_iters))(
-                    _dense(r)
-                )
-                return pl, pr
+            if precond_p == 2:
+                # whitening: packed Cholesky of the stats — no densify
+                def _refresh(l=l, r=r):
+                    return _chol_refresh(l, pt.b1), _chol_refresh(r, pt.b2)
+
+            else:
+
+                def _refresh(l=l, r=r):
+                    # densify only here — once per `update_every` steps
+                    pl = jax.vmap(
+                        lambda x: inverse_pth_root(x, 4, newton_iters)
+                    )(_dense(l))
+                    pr = jax.vmap(
+                        lambda x: inverse_pth_root(x, 4, newton_iters)
+                    )(_dense(r))
+                    return pl, pr
 
             def _keep(l=l, r=r):
                 return s["pl"], s["pr"]
 
             pl, pr = jax.lax.cond(refresh, _refresh, _keep)
 
-            pg = jax.vmap(lambda a, x, b: a @ x @ b)(pl, gb, pr)
+            if precond_p == 2:
+                pg = _whiten_apply(pl, gb, pr)
+            else:
+                pg = jax.vmap(lambda a, x, b: a @ x @ b)(pl, gb, pr)
             # Adam grafting: per-block norm transplant
             ab = _to_blocks(adam_dir, pt)
             a_norm = jnp.sqrt(jnp.sum(ab * ab, axis=(1, 2)) + 1e-30)

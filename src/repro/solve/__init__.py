@@ -1,0 +1,40 @@
+"""``repro.solve`` — packed-native normal-equations solvers on the ATA stack.
+
+The paper's opening claim is that ``AᵀA`` "appears as an intermediate
+operation in the solution of a wide set of problems"; this package is the
+layer that closes that loop. Everything downstream of a planned gram
+product stays in the packed lower-triangular block form — factor, solve,
+and precondition directly on :class:`repro.core.SymmetricMatrix` without
+ever materializing the ``O(n²)`` dense mirror:
+
+* :mod:`repro.solve.cholesky`   — blocked right-looking Cholesky walking
+  the packed block pytree in place (Pallas ``potrf``/``trsm`` base kernels
+  on TPU, batched per the ``repro.kernels`` contract);
+* :mod:`repro.solve.triangular` — blocked forward/backward substitution
+  against the packed factor, multi-RHS;
+* :mod:`repro.solve.lstsq`      — the front door: ``lstsq(A, b, ridge=…)``
+  = planned ``ata`` → packed Cholesky → two triangular solves, dispatched
+  through ``repro.tune.plan(op="solve")`` (which may instead choose CG);
+* :mod:`repro.solve.cg`         — matrix-free conjugate gradient on the
+  gram *operator* (each iteration one planned TN product pair — ``AᵀA``
+  is never formed) for the tall-skinny / many-RHS-free regime.
+
+Layering: ``solve`` sits ABOVE ``core`` and ``tune`` (algorithms →
+planner → kernels → **solvers**) — it consumes plans and packed storage,
+and only the dedicated base kernels reach below.
+"""
+
+from repro.solve.cholesky import CholeskyFactor, cholesky
+from repro.solve.cg import cg_gram, cg_lstsq
+from repro.solve.lstsq import lstsq
+from repro.solve.triangular import solve_cholesky, solve_triangular
+
+__all__ = [
+    "cholesky",
+    "CholeskyFactor",
+    "solve_triangular",
+    "solve_cholesky",
+    "lstsq",
+    "cg_gram",
+    "cg_lstsq",
+]

@@ -16,7 +16,13 @@ import jax
 
 from repro.tune import cost
 
-__all__ = ["base_fns", "build_callable", "ata_with_plan", "gemm_tn_with_plan"]
+__all__ = [
+    "base_fns",
+    "build_callable",
+    "ata_with_plan",
+    "gemm_tn_with_plan",
+    "lstsq_with_plan",
+]
 
 
 def base_fns(plan: cost.Plan):
@@ -50,8 +56,18 @@ def gemm_tn_with_plan(a, b, plan: cost.Plan, **kw):
     return strassen_tn(a, b, plan=plan, **kw)
 
 
+def lstsq_with_plan(a, b, plan: cost.Plan, **kw):
+    """``solve.lstsq`` dispatched exactly as the plan says (method, gram
+    tunables, base kernels)."""
+    from repro.solve.lstsq import lstsq
+
+    return lstsq(a, b, plan=plan, **kw)
+
+
 def build_callable(plan: cost.Plan):
     """One jitted function executing the plan (what the autotuner times)."""
     if plan.op == "gemm_tn":
         return jax.jit(lambda a, b: gemm_tn_with_plan(a, b, plan))
+    if plan.op == "solve":
+        return jax.jit(lambda a, b: lstsq_with_plan(a, b, plan))
     return jax.jit(lambda a: ata_with_plan(a, plan))

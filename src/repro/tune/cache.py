@@ -45,7 +45,12 @@ __all__ = [
 
 _MEMO: dict = {}
 _LOCK = threading.Lock()
-_SCHEMA = "v1"
+# v2: op='solve' joins the key space and Plan gained the `method` field.
+# Pre-PR-5 ("v1|…") cache files still load: v1 entries deserialize (the new
+# field defaults) and their keys are migrated to the v2 prefix on load —
+# key layout is otherwise unchanged, so old measured plans keep serving.
+_SCHEMA = "v2"
+_COMPAT_SCHEMAS = ("v1",)
 
 
 def cache_path() -> str:
@@ -85,6 +90,12 @@ def load_cache(path: Optional[str] = None) -> dict:
         return {}
     out = {}
     for key, d in raw.get("plans", {}).items():
+        for old in _COMPAT_SCHEMAS:
+            # older-schema keys whose layout is otherwise unchanged are
+            # migrated in place, so pre-bump measured plans keep serving
+            if key.startswith(old + "|"):
+                key = _SCHEMA + key[len(old):]
+                break
         try:
             out[key] = cost.Plan.from_json(d)
         except (TypeError, KeyError, ValueError):
@@ -133,8 +144,11 @@ def plan(
     """The front door: one frozen Plan for every ATA dispatch.
 
     Args:
-      op: ``'ata'`` (``C = AᵀA``) or ``'gemm_tn'`` (``C = AᵀB``).
+      op: ``'ata'`` (``C = AᵀA``), ``'gemm_tn'`` (``C = AᵀB``), or
+        ``'solve'`` (the normal-equations pipeline of ``repro.solve`` —
+        the plan then carries ``method`` ∈ {'factor', 'cg'}).
       m, n, k: operand shape — A is (m, n), B is (m, k); k defaults to n.
+        For ``op='solve'``, k is the right-hand-side count.
       batch: leading batch size (0 = unbatched).
       dtype: operand dtype string (``str(a.dtype)``).
       out: ``'dense'`` or ``'packed'`` output.
@@ -151,8 +165,13 @@ def plan(
     Returns:
       A frozen, JSON-serializable :class:`repro.tune.cost.Plan`.
     """
-    if op not in ("ata", "gemm_tn"):
-        raise ValueError(f"unknown op {op!r}; use 'ata' or 'gemm_tn'")
+    if op not in ("ata", "gemm_tn", "solve"):
+        raise ValueError(f"unknown op {op!r}; use 'ata', 'gemm_tn' or 'solve'")
+    if op == "solve" and batch:
+        # lstsq takes one 2-D design matrix; a batched solve plan would be
+        # unexecutable (and untimeable by the autotuner)
+        raise ValueError("op='solve' plans are unbatched (lstsq is 2-D); "
+                         f"got batch={batch}")
     backend = backend or jax.default_backend()
     k = n if k is None else k
     key = plan_key(op, m, n, k, batch, dtype, out, backend, devices)

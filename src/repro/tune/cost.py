@@ -63,11 +63,14 @@ import math
 from typing import Optional, Tuple
 
 from repro.core.reference import (
+    blocked_potrf_flops,
+    cg_iteration_flops,
     classical_gemm_flops,
     classical_syrk_flops,
     ata_flops,
     strassen_tn_flops,
     strassen_tn_flops_winograd,
+    trsm_flops,
 )
 from repro.tune import defaults
 
@@ -79,6 +82,7 @@ __all__ = [
     "predict_seconds",
     "retrieval_bytes",
     "dispatch_calls",
+    "solve_dispatch_calls",
     "candidates",
     "analytic_plan",
     "default_plan",
@@ -106,10 +110,10 @@ class Plan:
     variant.
     """
 
-    op: str                      # 'ata' | 'gemm_tn'
+    op: str                      # 'ata' | 'gemm_tn' | 'solve'
     m: int
     n: int
-    k: int                       # == n for op='ata'
+    k: int                       # == n for op='ata'; rhs count for op='solve'
     batch: int                   # leading batch size (0 = unbatched)
     dtype: str
     backend: str                 # jax.default_backend() at planning time
@@ -126,6 +130,11 @@ class Plan:
     # bitwise-equal values). Pre-leaf_dispatch cache entries deserialize to
     # 'unrolled' — exactly what they were measured with.
     leaf_dispatch: str = "unrolled"
+    # op='solve' only: 'factor' (packed gram → packed Cholesky → two
+    # substitutions) or 'cg' (matrix-free CG on the gram operator). None
+    # for the product ops — and for pre-solve cache entries, which is why
+    # the default keeps them deserializable unchanged.
+    method: Optional[str] = None
     devices: int = 1             # distributed branch: task-axis size
     nb: Optional[int] = None     # distributed stripe count (devices > 1)
     tile_w: Optional[int] = None  # distributed stripe width (devices > 1)
@@ -290,6 +299,67 @@ def dispatch_calls(op, algorithm, m, n, k, n_base, leaf_dispatch) -> int:
         s, g = _ata_leaves(m, n, n_base)
         return s + g
     return _strassen_leaves(m, n, k, n_base)
+
+
+def solve_dispatch_calls(n: int, packed_block: int) -> int:
+    """Ops the packed factor-and-substitute pipeline hands the runtime
+    beyond the gram product itself: per block column one potrf, one batched
+    panel trsm and up to two Schur-update einsums; per substitution pass
+    one diagonal solve and one update einsum per block row, twice.
+    """
+    nb = -(-n // packed_block)
+    factor = nb + (nb - 1) + 2 * max(nb - 1, 0)   # potrf + trsm + updates
+    substitute = 2 * 2 * nb                        # two passes, solve+update
+    return factor + substitute
+
+
+def _solve_predict(
+    method: str,
+    algorithm: str,
+    m: int,
+    n: int,
+    r: int,
+    n_base: int,
+    *,
+    dtype: str,
+    packed_block: int,
+    machine: "Machine",
+    blocks,
+    leaf_dispatch: str = "unrolled",
+) -> float:
+    """Roofline prediction for one op='solve' candidate.
+
+    ``method='factor'``: the planned packed gram (priced by the product
+    model below) plus the factorization/substitution tail — potrf/trsm
+    flops from the exact `core.reference` counters, and the **packed**
+    write traffic of the factor (the `analysis.roofline` solve model: the
+    factor overwrites T·bn² packed words, never an n² square).
+    ``method='cg'``: `CG_MAX_ITERS`-capped iterations, each streaming the
+    operand twice through the two planned TN products.
+    """
+    from repro.analysis.roofline import normal_eq_write_traffic
+
+    itemsize = _ITEMSIZE.get(dtype, 4)
+    if method == "cg":
+        iters = min(n, defaults.CG_MAX_ITERS)
+        flops = iters * cg_iteration_flops(m, n, r)
+        d = min(m, n)
+        compute_s = flops / (machine.peak_flops * machine.mxu_eff(d))
+        # each iteration streams A twice (A·p, then Aᵀ(A·p)) + the vectors
+        mem = iters * (2 * m * n + 6 * n * r) * itemsize
+        overhead = iters * 8 * machine.launch_overhead_s
+        return max(compute_s, mem / machine.hbm_bw) + overhead
+
+    gram_s = predict_seconds(
+        "ata", algorithm, m, n, n, n_base,
+        dtype=dtype, out="packed", packed_block=packed_block,
+        machine=machine, blocks=blocks, leaf_dispatch=leaf_dispatch,
+    )
+    flops = blocked_potrf_flops(n, packed_block) + 2 * trsm_flops(n, r)
+    compute_s = flops / (machine.peak_flops * machine.mxu_eff(packed_block))
+    mem = normal_eq_write_traffic(n, packed_block, r, itemsize=itemsize)
+    overhead = solve_dispatch_calls(n, packed_block) * machine.launch_overhead_s
+    return gram_s + max(compute_s, mem / machine.hbm_bw) + overhead
 
 
 def _flop_split(op, algorithm, m, n, k, n_base):
@@ -464,9 +534,18 @@ def candidates(
     Scoring uses ``out='dense'`` for the algorithm/n_base choice (see module
     docstring: out-invariance keeps packed results bitwise equal to dense),
     then attaches the requested ``out`` and its write-traffic prediction.
+
+    ``op='solve'`` (``k`` = RHS count) enumerates the two solver methods —
+    the factor pipeline inheriting the best packed-gram candidate's
+    algorithm tunables, and matrix-free CG inheriting the best TN-product
+    candidate's — scored by :func:`_solve_predict`.
     """
     k = n if k is None else k
     mach = machine_for(backend)
+    if op == "solve":
+        return _solve_candidates(
+            m, n, k, batch=batch, dtype=dtype, out=out, backend=backend
+        )
     syrk_bs, gemm_bs = _kernel_blocks(mach)
     base_tile = (
         (syrk_bs[1], syrk_bs[1]) if op == "ata" else (gemm_bs[1], gemm_bs[2])
@@ -527,6 +606,61 @@ def candidates(
     return plans
 
 
+def _solve_candidates(
+    m: int,
+    n: int,
+    r: int,
+    *,
+    batch: int = 0,
+    dtype: str = "float32",
+    out: str = "packed",
+    backend: str = "cpu",
+) -> list:
+    """Scored op='solve' candidates, best predicted first.
+
+    The factor candidate carries the best *packed-gram* candidate's
+    algorithm tunables (the gram dominates its cost and the factor walk
+    has no algorithm choice of its own); the CG candidate carries the best
+    TN-product candidate's (its iterations are ``Aᵀ(A·p)`` pairs).
+    """
+    if batch:
+        raise ValueError("op='solve' plans are unbatched (lstsq is 2-D); "
+                         f"got batch={batch}")
+    mach = machine_for(backend)
+    syrk_bs, gemm_bs = _kernel_blocks(mach)
+    base_tile = (syrk_bs[1], syrk_bs[1]) if mach.kernels else None
+    common = dict(
+        op="solve", m=m, n=n, k=r, batch=batch, dtype=dtype,
+        backend=backend, out=out,
+        packed_block=defaults.DEFAULT_PACKED_BLOCK,
+        use_kernels=mach.kernels,
+        syrk_blocks=syrk_bs, gemm_blocks=gemm_bs, source="analytic",
+    )
+    gram = candidates(
+        "ata", m, n, batch=batch, dtype=dtype, out="packed", backend=backend
+    )[0]
+    gemm = candidates(
+        "gemm_tn", m, n, r, batch=batch, dtype=dtype, out="dense",
+        backend=backend,
+    )[0]
+    plans = []
+    for method, donor in (("factor", gram), ("cg", gemm)):
+        pred = _solve_predict(
+            method, donor.algorithm, m, n, r, donor.n_base,
+            dtype=dtype, packed_block=donor.packed_block, machine=mach,
+            blocks=base_tile, leaf_dispatch=donor.leaf_dispatch,
+        )
+        plans.append(
+            Plan(
+                algorithm=donor.algorithm, n_base=donor.n_base,
+                leaf_dispatch=donor.leaf_dispatch, method=method,
+                predicted_s=pred, **common,
+            )
+        )
+    plans.sort(key=lambda p: p.predicted_s)
+    return plans
+
+
 def analytic_plan(op, m, n, k=None, **kw) -> Plan:
     """The analytic argmin — what ``repro.tune.plan`` returns on cache miss."""
     return candidates(op, m, n, k, **kw)[0]
@@ -564,6 +698,7 @@ def default_plan(
         use_kernels=mach.kernels,
         syrk_blocks=defaults.SYRK_BLOCKS, gemm_blocks=defaults.GEMM_BLOCKS,
         leaf_dispatch=defaults.DEFAULT_LEAF_DISPATCH,
+        method=defaults.DEFAULT_SOLVE_METHOD if op == "solve" else None,
         devices=devices, nb=nb, tile_w=tile_w, source="default",
     )
 

@@ -21,6 +21,9 @@ __all__ = [
     "GEMM_BLOCKS",
     "DEFAULT_VARIANT",
     "DEFAULT_LEAF_DISPATCH",
+    "DEFAULT_SOLVE_METHOD",
+    "CG_MAX_ITERS",
+    "CG_TOL",
     "TARGET_TILES_PER_DEVICE",
     "N_BASE_CANDIDATES",
     "SYRK_BLOCK_CANDIDATES",
@@ -52,6 +55,19 @@ DEFAULT_VARIANT = "strassen"
 # batched call (bitwise-equal output; the planner prices the difference as
 # per-call launch/graph overhead and picks per shape).
 DEFAULT_LEAF_DISPATCH = "unrolled"
+
+# Normal-equations solver (repro.solve) when nothing chose a method:
+# 'factor' = planned packed gram → packed Cholesky → two substitutions;
+# 'cg' = matrix-free CG on the gram operator. The planner's op='solve'
+# entry prices both and picks per shape/RHS count; this is the manual-pin
+# fallback only.
+DEFAULT_SOLVE_METHOD = "factor"
+
+# CG budget: iteration cap (also capped by n — exact termination in exact
+# arithmetic) and relative residual tolerance. The cost model prices CG
+# with this same cap, so prediction and dispatch agree.
+CG_MAX_ITERS = 64
+CG_TOL = 1e-6
 
 # Distributed tile schedule: how many lower-triangle tiles the tiling
 # search aims to give each device of the task axis (balance ↔ tile width).

@@ -105,6 +105,10 @@ def _operands(plan: cost.Plan, seed: int = 0):
     if plan.op == "gemm_tn":
         b = jnp.asarray(rng.standard_normal((*lead, plan.m, plan.k)), dt)
         return (a, b)
+    if plan.op == "solve":
+        # k is the RHS count; lstsq is unbatched (2-D design matrix)
+        b = jnp.asarray(rng.standard_normal((plan.m, plan.k)), dt)
+        return (a, b)
     return (a,)
 
 
@@ -184,5 +188,6 @@ def autotune(
 def _same_dispatch(a: cost.Plan, b: cost.Plan) -> bool:
     """True when two plans dispatch identically (tunables equal)."""
     keys = ("algorithm", "n_base", "packed_block", "use_kernels",
-            "syrk_blocks", "gemm_blocks", "leaf_dispatch", "nb", "tile_w")
+            "syrk_blocks", "gemm_blocks", "leaf_dispatch", "method",
+            "nb", "tile_w")
     return all(getattr(a, f) == getattr(b, f) for f in keys)

@@ -161,6 +161,35 @@ def test_corrupt_cache_entries_are_skipped_not_fatal(tmp_path):
     assert served.source == "cache"
 
 
+def test_pre_solve_v1_cache_file_still_loads_and_serves(tmp_path):
+    """Regression (schema v1→v2 bump, op='solve' PR): a pre-PR-5 cache file
+    — v1 schema tag, v1-prefixed keys, Plan entries WITHOUT the `method`
+    field — must keep loading and serving its measured plans (same
+    tolerance contract as the corrupt-entry fix: never fatal)."""
+    path = str(tmp_path / "v1.json")
+    p = dataclasses.replace(
+        tune.plan(op="ata", m=640, n=640), n_base=128,
+        source="measured", measured_s=1e-3,
+    )
+    key_v2 = plan_key("ata", 640, 640, 640, 0, "float32", "dense", p.backend)
+    assert key_v2.startswith("v2|")
+    key_v1 = "v1|" + key_v2.split("|", 1)[1]
+    entry = p.to_json()
+    del entry["method"]  # the field did not exist pre-PR-5
+    with open(path, "w") as f:
+        json.dump({"schema": "v1", "plans": {key_v1: entry}}, f)
+
+    loaded = load_cache(path)
+    # the v1 key is migrated to the v2 prefix, the missing field defaults
+    assert set(loaded) == {key_v2}
+    assert loaded[key_v2].method is None
+    assert loaded[key_v2].n_base == 128
+
+    tune.cache.clear_memo()
+    served = tune.plan(op="ata", m=640, n=640, cache_file=path)
+    assert served.source == "cache" and served.n_base == 128
+
+
 # --- autotune ---------------------------------------------------------------
 
 
