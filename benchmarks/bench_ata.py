@@ -12,7 +12,10 @@ in three flavours:
     same recursion unrolled, on one recursion-forcing plan per shape: the
     level-synchronous formulation's whole point is to stop losing the
     paper's flop saving to per-leaf dispatch overhead, so this row records
-    the Strassen-vs-dot speedup both ways.
+    the Strassen-vs-dot speedup both ways;
+  * ``fused``  — the recursion with **fused-operand leaf dispatch** (the ±1
+    combinations folded into the leaf products, zero materialized operand
+    stacks) against the same recursion unrolled, interleaved.
 
 Derived column: effective GFLOPs (Eq. 9 with the actual m·n² shape, r=1)
 for each path, the measured speedups, and the analytic flop ratio at that
@@ -28,9 +31,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (
-    batched_recursion_plan,
     effective_gflops,
     emit,
+    recursion_plan,
     smoke,
     time_fn,
     time_pair,
@@ -92,7 +95,9 @@ def run():
 
         # leaf-dispatch comparison: the SAME recursion, unrolled vs batched,
         # interleaved (the ratio is the claim; see tune.search.time_pair).
-        plan_b = batched_recursion_plan("ata", m, n, backend=plan.backend)
+        plan_b = recursion_plan(
+            "ata", m, n, leaf_dispatch="batched", backend=plan.backend
+        )
         plan_u = dataclasses.replace(plan_b, leaf_dispatch="unrolled")
         f_unr = jax.jit(lambda a: ata(a, plan=plan_u))
         f_bat = jax.jit(lambda a: ata(a, plan=plan_b))
@@ -112,6 +117,32 @@ def run():
             n_base=plan_u.n_base,
             algorithm=plan_u.algorithm,
             leaf_dispatch="batched",
+        )
+
+        # fused vs unrolled on the planner's best fused recursion,
+        # interleaved — the zero-operand-stack leaf combine
+        plan_f = recursion_plan(
+            "ata", m, n, leaf_dispatch="fused", backend=plan.backend
+        )
+        plan_uf = dataclasses.replace(plan_f, leaf_dispatch="unrolled")
+        f_unr_f = jax.jit(lambda a: ata(a, plan=plan_uf))
+        f_fus = jax.jit(lambda a: ata(a, plan=plan_f))
+        t_unr_f, t_fus = time_pair(f_unr_f, f_fus, a)
+        emit(
+            f"fig3_ata_fused_{m}x{n}",
+            t_fus,
+            f"eff_gflops={effective_gflops(m, n, t_fus):.2f} "
+            f"speedup={t_ref / t_fus:.3f} unrolled_speedup={t_ref / t_unr_f:.3f} "
+            f"fused_vs_unrolled={t_unr_f / t_fus:.3f} n_base={plan_f.n_base}",
+            shape=(m, n),
+            gflops=effective_gflops(m, n, t_fus),
+            mode="dense",
+            ref_seconds=t_ref,
+            unrolled_seconds=t_unr_f,
+            fused_vs_unrolled=round(t_unr_f / t_fus, 4),
+            n_base=plan_f.n_base,
+            algorithm=plan_f.algorithm,
+            leaf_dispatch="fused",
         )
 
 

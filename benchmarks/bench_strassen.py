@@ -11,7 +11,11 @@ The ``fig4_strassen_batched_*`` rows run the SAME planned recursion with
 ``leaf_dispatch='batched'`` (all 7^L leaves in one batched TN dot) against
 the unrolled form, interleaved — the dispatch-overhead claim of the
 batched-leaf PR: the recursion's speedup-vs-dot must come from flops, not
-be eaten by per-leaf launches.
+be eaten by per-leaf launches. The ``fig4_strassen_fused_*`` rows do the
+same for ``leaf_dispatch='fused'`` (the ±1 operand combinations folded
+into the leaf products, zero materialized operand stacks) — the
+fused-leaf PR's claim that removing the combine traffic beats both the
+per-leaf launches of unrolled *and* the stack materialization of batched.
 """
 
 from __future__ import annotations
@@ -23,9 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (
-    batched_recursion_plan,
     effective_gflops,
     emit,
+    recursion_plan,
     smoke,
     time_fn,
     time_pair,
@@ -54,10 +58,14 @@ def run():
         # the batched row runs the planner's best batched recursive
         # candidate (its argmin may be the plain dense dot); the unrolled
         # twin flips only leaf_dispatch so their ratio isolates dispatch.
-        plan_bat = batched_recursion_plan(
-            "gemm_tn", m, n, k, backend=plan.backend
+        plan_bat = recursion_plan(
+            "gemm_tn", m, n, k, leaf_dispatch="batched", backend=plan.backend
         )
         plan_ubat = dataclasses.replace(plan_bat, leaf_dispatch="unrolled")
+        plan_fus = recursion_plan(
+            "gemm_tn", m, n, k, leaf_dispatch="fused", backend=plan.backend
+        )
+        plan_ufus = dataclasses.replace(plan_fus, leaf_dispatch="unrolled")
         f_st = jax.jit(lambda a, b: strassen_tn(a, b, plan=plan))
         f_wg = jax.jit(lambda a, b: strassen_tn(a, b, plan=plan_wg))
         f_bat = jax.jit(lambda a, b: strassen_tn(a, b, plan=plan_bat))
@@ -101,6 +109,25 @@ def run():
             batched_vs_unrolled=round(t_unr / t_bat, 4),
             n_base=plan_bat.n_base,
             leaf_dispatch="batched",
+        )
+        # fused vs unrolled on the planner's best fused recursion,
+        # interleaved — zero operand-add stacks vs per-leaf combines
+        f_fus = jax.jit(lambda a, b: strassen_tn(a, b, plan=plan_fus))
+        f_ufus = jax.jit(lambda a, b: strassen_tn(a, b, plan=plan_ufus))
+        t_unr_f, t_fus = time_pair(f_ufus, f_fus, a, b)
+        emit(
+            f"fig4_strassen_fused_{m}x{n}x{k}",
+            t_fus,
+            f"eff_gflops={effective_gflops(m, n, t_fus, r=2, k=k):.2f} "
+            f"speedup={t_ref/t_fus:.3f} unrolled_speedup={t_ref/t_unr_f:.3f} "
+            f"fused_vs_unrolled={t_unr_f/t_fus:.3f} n_base={plan_fus.n_base}",
+            shape=(m, n, k),
+            gflops=effective_gflops(m, n, t_fus, r=2, k=k),
+            ref_seconds=t_ref,
+            unrolled_seconds=t_unr_f,
+            fused_vs_unrolled=round(t_unr_f / t_fus, 4),
+            n_base=plan_fus.n_base,
+            leaf_dispatch="fused",
         )
 
 

@@ -23,6 +23,7 @@ __all__ = [
     "time_pair",
     "effective_gflops",
     "backend_meta",
+    "recursion_plan",
     "batched_recursion_plan",
     "emit",
     "drain_rows",
@@ -71,13 +72,16 @@ def backend_meta() -> dict:
     return dict(_META)
 
 
-def batched_recursion_plan(op: str, m: int, n: int, k: int | None = None,
-                           *, backend: str | None = None):
-    """The planner's best *batched, actually-recursing* candidate for the
-    leaf-dispatch BENCH rows — shared by ``bench_ata``/``bench_strassen``
-    so both benches' "batched row" means the same thing. The planner's
-    argmin may be a degenerate single-leaf (or dense) dispatch, which has
-    nothing to contrast; the fallback then forces a couple of levels."""
+def recursion_plan(op: str, m: int, n: int, k: int | None = None,
+                   *, leaf_dispatch: str = "batched",
+                   backend: str | None = None):
+    """The planner's best *actually-recursing* candidate with the requested
+    leaf dispatch, for the leaf-dispatch BENCH rows — shared by
+    ``bench_ata``/``bench_strassen`` so each bench's "batched row"/"fused
+    row" means the same thing. The planner's argmin may be a degenerate
+    single-leaf (or dense) dispatch, which has nothing to contrast; the
+    fallback then forces a couple of levels (classical variant — the one
+    every dispatch supports)."""
     import dataclasses
 
     from repro import tune
@@ -88,14 +92,20 @@ def batched_recursion_plan(op: str, m: int, n: int, k: int | None = None,
     for cand in cands:
         if (
             cand.algorithm != "dense"
-            and cand.leaf_dispatch == "batched"
+            and cand.leaf_dispatch == leaf_dispatch
             and cand.n_base < min(dims)
         ):
             return cand
     return dataclasses.replace(
         cands[0], algorithm="strassen", n_base=max(128, min(dims) // 4),
-        leaf_dispatch="batched",
+        leaf_dispatch=leaf_dispatch,
     )
+
+
+def batched_recursion_plan(op: str, m: int, n: int, k: int | None = None,
+                           *, backend: str | None = None):
+    """Pre-fused-PR name for :func:`recursion_plan` at its default dispatch."""
+    return recursion_plan(op, m, n, k, leaf_dispatch="batched", backend=backend)
 
 
 def effective_gflops(m: int, n: int, seconds: float, r: int = 1, k: int | None = None) -> float:

@@ -41,7 +41,7 @@ from repro.compat import tpu_compiler_params
 # autotuner sweeps alternatives per shape (repro.tune.plan → gemm_blocks).
 from repro.tune.defaults import GEMM_BLOCKS as DEFAULT_BLOCKS
 
-__all__ = ["gemm_tn_pallas", "DEFAULT_BLOCKS"]
+__all__ = ["gemm_tn_pallas", "gemm_tn_fused_pallas", "DEFAULT_BLOCKS"]
 
 
 def _gemm_tn_kernel(a_ref, b_ref, c_ref, acc_ref, *, alpha: float, l_axis: int):
@@ -136,4 +136,173 @@ def gemm_tn_pallas(
         interpret=interpret,
         name="gemm_tn",
     )(a, b)
+    return out[..., :n, :k]
+
+
+# ---------------------------------------------------------------------------
+# fused-operand leaf launch (leaf_dispatch='fused')
+#
+# Per the repro.kernels coefficient-table contract: the operands arrive in
+# the block-major leaf-grid layout of `core.strassen._to_blocks` and the
+# per-leaf ±1 combinations run in the PROLOGUE of this kernel, against the
+# prefetched slot tables — no operand-combination stack is ever written to
+# HBM. Each slot is one input ref (the same operand array passed W times
+# with a per-slot index map off the prefetched (row, col) tables); the body
+# combines them as the same balanced add tree as the trace-time paths
+# (sign-0 slots contribute an exact ±0 instead of being dropped — value-
+# equal), then runs the identical blocked TN dot as `_gemm_tn_kernel`:
+# same (bm, bn)×(bm, bk) chunk shapes, same minor-most contraction order,
+# same f32 VMEM accumulation — which is what keeps the fused launch
+# bitwise-equal to the unrolled per-leaf kernel calls.
+# ---------------------------------------------------------------------------
+
+
+def _gemm_tn_fused_kernel(
+    ar, ac, asg, br, bc, bsg, *refs, w: int, alpha: float, t_axis: int, l_axis: int
+):
+    """One ([g, t, b,] i, j, l) grid step of the fused leaf launch:
+    acc += combine(A slots)ᵀ · combine(B slots)."""
+    del ar, ac, br, bc  # consumed by the index maps
+    a_refs, b_refs = refs[:w], refs[w : 2 * w]
+    c_ref, acc_ref = refs[2 * w], refs[2 * w + 1]
+    t = pl.program_id(t_axis)
+
+    @pl.when(pl.program_id(l_axis) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def combine(slot_refs, sgn, lo, hi):
+        # the balanced slot tree of `core.strassen._combine_slots`, with
+        # runtime ±1/0 signs (a sign multiply is exact; adding the ±0 of a
+        # dead slot is exact for every non-zero partial sum)
+        if hi - lo == 1:
+            x = slot_refs[lo][...].reshape(slot_refs[lo].shape[-2:])
+            return sgn[t, lo].astype(x.dtype) * x
+        mid = (lo + hi) // 2
+        return combine(slot_refs, sgn, lo, mid) + combine(slot_refs, sgn, mid, hi)
+
+    acc_ref[...] += jax.lax.dot_general(
+        combine(a_refs, asg, 0, w),
+        combine(b_refs, bsg, 0, w),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(l_axis) == pl.num_programs(l_axis) - 1)
+    def _flush():
+        c_ref[...] = (alpha * acc_ref[...]).astype(c_ref.dtype).reshape(c_ref.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "blocks", "interpret", "out_dtype")
+)
+def gemm_tn_fused_pallas(
+    a_blocks: jax.Array,
+    b_blocks: jax.Array,
+    tables,
+    *,
+    alpha: float = 1.0,
+    blocks: tuple = DEFAULT_BLOCKS,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Fused-operand Strassen leaf launch ``P[g·T+t] = alpha·Â(g,t)ᵀB̂(g,t)``.
+
+    ``a_blocks``: ``(G, R, C, [B,] mb, n)`` block-major leaf grids
+    (`core.strassen._to_blocks` layout, ``G`` independent groups);
+    ``b_blocks`` the same with trailing ``(mb, k)``. ``tables`` =
+    ``((a_rows, a_cols, a_sgn), (b_rows, b_cols, b_sgn))``, six ``(T, W)``
+    int32 arrays (`core.strassen._slot_tables`): leaf operand ``Â(g, t)``
+    is the signed sum of blocks ``a_blocks[g, a_rows[t, w], a_cols[t, w]]``
+    over the ``W`` slots. One launch computes all ``G·T`` leaf products —
+    the ± combinations run in the kernel prologue, nothing is materialized.
+    """
+    if a_blocks.ndim not in (5, 6) or a_blocks.ndim != b_blocks.ndim:
+        raise ValueError(
+            f"bad fused block grids: {a_blocks.shape} x {b_blocks.shape}"
+        )
+    if (
+        a_blocks.shape[:3] != b_blocks.shape[:3]
+        or a_blocks.shape[:-2] != b_blocks.shape[:-2]
+        or a_blocks.shape[-2] != b_blocks.shape[-2]
+    ):
+        raise ValueError(
+            f"bad fused block grids: {a_blocks.shape} x {b_blocks.shape}"
+        )
+    (a_rows, a_cols, a_sgn), (b_rows, b_cols, b_sgn) = tables
+    t_count, w = a_rows.shape
+    batched = a_blocks.ndim == 6
+    g_count = a_blocks.shape[0]
+    m, n = a_blocks.shape[-2:]
+    k = b_blocks.shape[-1]
+    bm, bn, bk = blocks
+    # the same clamp rule as `gemm_tn_pallas` on one leaf's (m, n, k) —
+    # identical chunking is what makes fused bitwise-equal to unrolled
+    bm = min(bm, max(8, -(-m // 8) * 8))
+    bn = min(bn, max(128, -(-n // 128) * 128))
+    bk = min(bk, max(128, -(-k // 128) * 128))
+
+    a_blocks = _pad_to(a_blocks, bm, bn)
+    b_blocks = _pad_to(b_blocks, bm, bk)
+    mp, np_ = a_blocks.shape[-2:]
+    kp = b_blocks.shape[-1]
+
+    lead = (1,) if batched else ()
+    batch_dims = a_blocks.shape[3:-2]
+    grid = (g_count, t_count) + batch_dims + (np_ // bn, kp // bk, mp // bm)
+    t_axis, l_axis = 1, len(grid) - 1
+    _pre = lambda idx: idx[2:-3]  # () unbatched, (b,) batched
+
+    def _a_index(slot):
+        def index(*args):
+            idx, (rows, cols) = args[: len(grid)], args[len(grid) : len(grid) + 2]
+            return (idx[0], rows[idx[1], slot], cols[idx[1], slot]) + _pre(
+                idx
+            ) + (idx[-1], idx[-3])
+
+        return index
+
+    def _b_index(slot):
+        def index(*args):
+            idx, rows, cols = args[: len(grid)], args[len(grid) + 3], args[len(grid) + 4]
+            return (idx[0], rows[idx[1], slot], cols[idx[1], slot]) + _pre(
+                idx
+            ) + (idx[-1], idx[-2])
+
+        return index
+
+    def _c_index(*args):
+        idx = args[: len(grid)]
+        return (idx[0] * t_count + idx[1],) + _pre(idx) + (idx[-3], idx[-2])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1) + lead + (bm, bn), _a_index(s)) for s in range(w)
+        ]
+        + [
+            pl.BlockSpec((1, 1, 1) + lead + (bm, bk), _b_index(s)) for s in range(w)
+        ],
+        out_specs=pl.BlockSpec((1,) + lead + (bn, bk), _c_index),
+        scratch_shapes=[pltpu.VMEM((bn, bk), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _gemm_tn_fused_kernel, w=w, alpha=alpha, t_axis=t_axis, l_axis=l_axis
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (g_count * t_count,) + batch_dims + (np_, kp), out_dtype
+        ),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",) * l_axis + ("arbitrary",),
+        ),
+        interpret=interpret,
+        name="gemm_tn_fused",
+    )(
+        jnp.asarray(a_rows), jnp.asarray(a_cols), jnp.asarray(a_sgn),
+        jnp.asarray(b_rows), jnp.asarray(b_cols), jnp.asarray(b_sgn),
+        *([a_blocks] * w), *([b_blocks] * w),
+    )
     return out[..., :n, :k]

@@ -45,12 +45,21 @@ __all__ = [
 
 _MEMO: dict = {}
 _LOCK = threading.Lock()
-# v2: op='solve' joins the key space and Plan gained the `method` field.
-# Pre-PR-5 ("v1|…") cache files still load: v1 entries deserialize (the new
-# field defaults) and their keys are migrated to the v2 prefix on load —
-# key layout is otherwise unchanged, so old measured plans keep serving.
-_SCHEMA = "v2"
-_COMPAT_SCHEMAS = ("v1",)
+# v3: `leaf_dispatch` gained the 'fused' value (fused-operand leaf
+# kernels). v2 introduced op='solve' and the `method` field. Older-schema
+# ("v1|…"/"v2|…") cache files still load: old entries deserialize (missing
+# fields default) and their keys are migrated to the current prefix on
+# load — key layout is otherwise unchanged, so old measured plans keep
+# serving. Symmetrically, entries written by a *newer* schema may carry
+# leaf_dispatch values this revision has never heard of: those are
+# sanitized to 'unrolled' (always valid, bitwise-identical output) instead
+# of raising at every planned dispatch.
+_SCHEMA = "v3"
+_COMPAT_SCHEMAS = ("v1", "v2")
+
+# every leaf_dispatch this revision's recursions accept (mirrors
+# core.strassen.resolve_tunables; kept literal so load never imports jax)
+_KNOWN_LEAF_DISPATCHES = ("unrolled", "batched", "fused")
 
 
 def cache_path() -> str:
@@ -97,13 +106,21 @@ def load_cache(path: Optional[str] = None) -> dict:
                 key = _SCHEMA + key[len(old):]
                 break
         try:
-            out[key] = cost.Plan.from_json(d)
+            p = cost.Plan.from_json(d)
         except (TypeError, KeyError, ValueError):
             # schema drift (TypeError), truncated/hand-edited entries
             # (KeyError on a missing field, ValueError on a non-dict value):
             # skip the entry; the analytic model covers the key instead of
             # one bad line crashing every planned dispatch in the process.
             continue
+        if p.leaf_dispatch not in _KNOWN_LEAF_DISPATCHES:
+            # a future schema's dispatch value: fall back to the always-
+            # valid unrolled form (bitwise-identical output) rather than
+            # letting resolve_tunables raise on every dispatch of the key.
+            import dataclasses
+
+            p = dataclasses.replace(p, leaf_dispatch="unrolled")
+        out[key] = p
     return out
 
 

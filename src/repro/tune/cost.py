@@ -26,10 +26,14 @@ The memory terms: ``stream_bytes`` is the blocked-matmul operand traffic
 ``(mult/2)·(1/bn + 1/bk)`` of the *kernel output tile* (the plan's Pallas
 blocks on TPU, XLA's ~256 tiling elsewhere) — the same for the one big
 dense dot and for the recursion's base tiles, which is what makes the
-comparison honest; ``add_bytes`` charges each VPU addition flop
-``add_word_cost`` words (≈1 on TPU where XLA fuses operand combinations
-into the consuming dot's reads; higher on CPU), the Strassen memory
-overhead the paper's Section 3.3 engineers around.
+comparison honest; ``combine_bytes`` charges the operand-combination
+traffic — each VPU addition flop ``add_word_cost`` words for unrolled
+(≈1 on TPU where XLA fuses operand combinations into the consuming dot's
+reads; higher on CPU), ``stack_word_cost`` words for batched's
+materialized stacks, and the 3^L slot-gather amplification for fused —
+the Strassen memory overhead the paper's Section 3.3 engineers around.
+It is an *additive* term, not part of the compute/memory max: the combine
+passes serialize with the leaf matmuls on every measured backend.
 
 A third, previously-unpriced term joins the roofline in this revision:
 **per-call launch/graph overhead** (``dispatch_calls × launch_overhead_s``).
@@ -37,13 +41,17 @@ The unrolled recursion hands the runtime one op per leaf — ``7^L`` dots —
 and on small leaves that dispatch tax, not flops, is what loses to a single
 plain dot (BENCH_strassen's 0.19–0.61 speedups). The level-synchronous
 ``leaf_dispatch='batched'`` formulation collapses it to O(levels) calls at
-the price of materialized (un-fused) operand-combination stacks; the model
-prices both so the argmin can pick per shape.
+the price of materialized (un-fused) operand-combination stacks;
+``leaf_dispatch='fused'`` collapses both at once — one launch per level
+and zero materialized stacks, paying only the slot-gather read
+amplification (3^L) and the coefficient tables. The model prices all
+three so the argmin can pick per shape.
 
 Candidate axes (``candidates``): algorithm (dense-dot vs strassen vs
 winograd vs the ATA recursion), output mode (dense vs packed), recursion
-cutoff ``n_base``, leaf dispatch (unrolled vs batched — value-identical,
-speed-different), and the Pallas kernel block shapes. The algorithm /
+cutoff ``n_base``, leaf dispatch (unrolled vs batched vs fused —
+value-identical, speed-different; fused is classical-variant-only), and
+the Pallas kernel block shapes. The algorithm /
 ``n_base`` choice is deliberately **out-invariant** (scored with the dense
 output term) so that ``out='packed'`` and ``out='dense'`` plans of one
 problem always run the identical recursion — packed results stay bitwise
@@ -181,6 +189,12 @@ class Machine:
     d_half: int            # matmul dim at which efficiency reaches 1/2
     kernels: bool          # Pallas kernels compile natively (not interpret)
     add_word_cost: float   # extra HBM words charged per VPU addition flop
+    # words charged per addition flop of the *batched* dispatch, whose
+    # operand combinations materialize as (7^ℓ,…) stacks the leaf dot then
+    # re-reads. Nominally write+read = 2.0; the cpu model carries a larger
+    # measured value (see MACHINES) because the block-major relayout and
+    # stack concats thrash caches far beyond their linear byte count.
+    stack_word_cost: float = 2.0
     xla_tile: int = 256    # nominal output tile of the non-Pallas matmul
     # per dispatched op: runtime launch/dispatch + amortized graph/compile
     # overhead. This is the term the batched leaf dispatch exists to kill:
@@ -212,10 +226,16 @@ MACHINES = {
     # at 1024³ on this container (peak 2.2e11), while 256-leaf recursions
     # run at <0.4 of that (d_half 512 — CPU matmul efficiency falls off far
     # harder than the MXU's), and each dispatched op costs ~50 µs of thunk
-    # overhead. Under this model the argmin at the bench shapes matches the
-    # measured ranking: dense < batched(L=1) < batched(deep) ≈ unrolled.
+    # overhead. ``stack_word_cost`` is re-fit against the fused-leaf PR's
+    # min-of-interleaved sweep at 2048³/n_base=1024: the batched dispatch
+    # trails the unrolled one by ~0.022 s there, which against its ~1.9e7
+    # addition flops prices each materialized-stack add at ≈5.5 words —
+    # the nominal 2.0 hid behind the compute roofline and ranked batched
+    # above unrolled, inverting the measured order. Under this model the
+    # argmin at the bench shapes matches the measured per-shape ranking:
+    # dense < unrolled(L=1) < fused(L=1) < batched(L=1) < deep recursions.
     "cpu": lambda: Machine("cpu", 2.2e11, 2.0e10, 512, False, 1.5,
-                           launch_overhead_s=5e-5),
+                           stack_word_cost=5.5, launch_overhead_s=5e-5),
     # A100-class default for completeness (untuned; autotune refines).
     "gpu": lambda: Machine("gpu", 1.56e14, 1.6e12, 128, False, 1.0,
                            launch_overhead_s=8e-6),
@@ -289,10 +309,20 @@ def dispatch_calls(op, algorithm, m, n, k, n_base, leaf_dispatch) -> int:
     ``'unrolled'`` pays one dispatched dot/syrk per leaf (``7^L`` for
     Strassen, ``4^L`` syrks + the off-diagonal leaf dots for ATA);
     ``'batched'`` pays the two batched leaf calls plus O(levels)
-    encode/decode stack ops. 'dense' is the single classical dot.
+    encode/decode stack ops. ``'fused'`` is cheapest of all: the slot
+    gather lives inside the kernel prologue, so Strassen is one fused
+    leaf launch plus one decode pass per level, and ATA is one gathered
+    diagonal syrk plus one fused off-diagonal launch and one decode pass
+    per level — one launch per *level*, never per leaf. 'dense' is the
+    single classical dot.
     """
     if algorithm == "dense":
         return 1
+    if leaf_dispatch == "fused":
+        lv = _levels(op, m, n, k, n_base)
+        if op == "ata":
+            return 2 + 2 * lv
+        return 1 + lv
     if leaf_dispatch == "batched":
         return 2 + 4 * _levels(op, m, n, k, n_base)
     if op == "ata":
@@ -445,8 +475,21 @@ def predict_seconds(
     per leaf — the term that was silently zero before and made tiny-leaf
     recursions look free); ``'batched'`` pays O(levels) calls but its
     operand-combination adds are *materialized* stacks the leaf dot then
-    re-reads, so its add traffic is charged a full write+read (2.0 words)
-    instead of the fused ``add_word_cost``.
+    re-reads, charged ``stack_word_cost`` words per add (nominal write+read
+    = 2.0, measured higher on cpu); ``'fused'`` pays neither — its stack
+    charge drops to ~0, replaced by the slot-gather read amplification
+    (each root leaf block is read once per nonzero slot: Strassen's combos
+    total 12 terms per 7 children per side, so L levels amplify the operand
+    read by (12/4)^L = 3^L) plus the coefficient tables themselves.
+
+    The combine/add traffic is charged *additively* on top of the
+    compute/memory roofline max, not inside it: on every backend we
+    measured, the operand-combination passes serialize with the leaf
+    matmuls (XLA:CPU runs them as separate thunks; the fused kernel runs
+    them in the same launch but on the VPU ahead of each MXU tile), and
+    folding them into the max() hid them entirely at compute-bound shapes
+    — which is exactly where the bench measurements show the dispatches
+    separating.
     """
     mach = machine or machine_for(backend)
     itemsize = _ITEMSIZE.get(dtype, 4)
@@ -463,11 +506,26 @@ def predict_seconds(
     bn = min(bn, max(d_base, 1))
     bk = min(bk, max(d_base, 1))
     stream_bytes = (mult / 2) * (1.0 / bn + 1.0 / bk) * itemsize
-    add_word_cost = (
-        2.0 if leaf_dispatch == "batched" and algorithm != "dense"
-        else mach.add_word_cost
-    )
-    add_bytes = add_word_cost * adds * itemsize
+    if leaf_dispatch == "fused" and algorithm != "dense":
+        # no materialized stacks: the slot gather reads each root leaf
+        # block once per nonzero slot (3^L amplification, see docstring),
+        # plus the six (7^L, 2^L) int32 coefficient tables.
+        lv = _levels(op, m, n, k, n_base)
+        operand_words = (m * n + m * k) if op == "gemm_tn" else 2 * m * n
+        combine_bytes = operand_words * 3.0**lv * itemsize + 6 * 14**lv * 4
+        if not mach.kernels:
+            # interpret/XLA fallback: the gathered combinations still
+            # materialize per leaf (briefly — never as cross-leaf stacks)
+            # and are re-read by the leaf dot; charge the addition flops
+            # like the unrolled form on top of the gather reads.
+            combine_bytes += mach.add_word_cost * adds * itemsize
+    else:
+        add_word_cost = (
+            mach.stack_word_cost
+            if leaf_dispatch == "batched" and algorithm != "dense"
+            else mach.add_word_cost
+        )
+        combine_bytes = add_word_cost * adds * itemsize
     if devices > 1 and op == "ata":
         if nb is None or tile_w is None:
             nb, tile_w = distributed_tiling(
@@ -476,12 +534,13 @@ def predict_seconds(
         out_bytes = retrieval_bytes(out, nb, tile_w, itemsize)
     else:
         out_bytes = _output_bytes(op, out, n, k, packed_block, itemsize)
-    memory_s = b * (stream_bytes + add_bytes + out_bytes) / mach.hbm_bw
+    memory_s = b * (stream_bytes + out_bytes) / mach.hbm_bw
+    combine_s = b * combine_bytes / mach.hbm_bw
     overhead_s = (
         dispatch_calls(op, algorithm, m, n, k, n_base, leaf_dispatch)
         * mach.launch_overhead_s
     )
-    return max(compute_s, memory_s) + overhead_s
+    return max(compute_s, memory_s) + combine_s + overhead_s
 
 
 # ---------------------------------------------------------------------------
@@ -564,7 +623,12 @@ def candidates(
     seen_degenerate = False
     for algo in algos:
         for n_base in n_bases if algo != "dense" else [defaults.DEFAULT_N_BASE]:
-            lds = ("unrolled", "batched")
+            lds = defaults.LEAF_DISPATCH_CANDIDATES
+            if algo != "strassen":
+                # fused slot tables encode the classical 7-term combos
+                # only — winograd's chained within-level sums don't fit
+                # (core.strassen raises), and dense has nothing to fuse.
+                lds = tuple(ld for ld in lds if ld != "fused")
             if algo == "dense":
                 lds = ("unrolled",)  # one classical dot — nothing to batch
             elif min(m, n, k) <= n_base:

@@ -261,3 +261,186 @@ def test_strassen_batched_leaves_with_pallas_base():
     np.testing.assert_array_equal(np.asarray(u), np.asarray(got))
     # f32 + one Strassen level: looser than the plain-kernel sweeps above
     np.testing.assert_allclose(got, gemm_tn_ref(a, b), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused-operand leaves (the coefficient-table contract)
+# ---------------------------------------------------------------------------
+
+
+def _slot_path(a, b, L, blocks):
+    """The XLA half of the fused contract: per-leaf trace-time slot gather
+    (`_combine_slots`' balanced ± tree) + the SAME unbatched blocked kernel
+    per leaf. The fused launch must match it bitwise — identical chunk
+    dots, identical add-tree association, signs applied in-kernel."""
+    from repro.core.strassen import _block_getter, _combine_slots, _slot_tables
+
+    (ar, ac, asg), (br, bc, bsg) = _slot_tables(L)
+    ga, gb = _block_getter(a, L), _block_getter(b, L)
+    return jnp.stack([
+        gemm_tn(
+            _combine_slots(ga, ar[t], ac[t], asg[t]),
+            _combine_slots(gb, br[t], bc[t], bsg[t]),
+            blocks=blocks, interpret=True,
+        )
+        for t in range(ar.shape[0])
+    ])
+
+
+@pytest.mark.parametrize(
+    "m,n,k,L",
+    [
+        (256, 192, 128, 1),
+        (67, 53, 41, 1),    # odd everywhere -> root pad, cropped leaves
+        (96, 96, 96, 2),    # two levels: 49 leaves, one launch
+    ],
+)
+def test_gemm_tn_fused_bitwise_vs_slot_gather(m, n, k, L):
+    from repro.core.strassen import _pad_root, _slot_tables, _to_blocks
+    from repro.kernels import ops
+
+    r = np.random.default_rng(hash((m, n, k, L)) % 2**32)
+    a = _pad_root(jnp.asarray(r.standard_normal((m, n)), jnp.float32), L)
+    b = _pad_root(jnp.asarray(r.standard_normal((m, k)), jnp.float32), L)
+    blocks = (64, 64, 64)
+    want = _slot_path(a, b, L, blocks)
+    got = ops.gemm_tn_fused(
+        _to_blocks(a, L)[None], _to_blocks(b, L)[None], _slot_tables(L),
+        blocks=blocks, interpret=True,
+    )
+    assert got.shape == want.shape and got.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("B", [1, 3])
+def test_gemm_tn_fused_batched_grid(B):
+    """An operand batch dim rides the grid like everything else — including
+    the B=1 degenerate leading dim the level-synchronous ATA tree emits."""
+    from repro.core.strassen import _pad_root, _slot_tables, _to_blocks
+    from repro.kernels import ops
+
+    r = np.random.default_rng(20 + B)
+    a = _pad_root(jnp.asarray(r.standard_normal((B, 128, 96)), jnp.float32), 1)
+    b = _pad_root(jnp.asarray(r.standard_normal((B, 128, 64)), jnp.float32), 1)
+    blocks = (64, 64, 64)
+    want = _slot_path(a, b, 1, blocks)  # (7, B, n/2, k/2): leaf-major stack
+    got = ops.gemm_tn_fused(
+        _to_blocks(a, 1)[None], _to_blocks(b, 1)[None], _slot_tables(1),
+        blocks=blocks, interpret=True,
+    )
+    assert got.shape == (7, B, 48, 32)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    # B=1 slices agree with the unbatched launch (same grids, same math)
+    one = ops.gemm_tn_fused(
+        _to_blocks(a[0], 1)[None], _to_blocks(b[0], 1)[None], _slot_tables(1),
+        blocks=blocks, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got[:, 0]), np.asarray(one))
+
+
+def test_gemm_tn_fused_bf16_storage_f32_accumulate():
+    """bf16 operand blocks, f32 accumulation. Bitwise parity with the
+    trace-time gather is an f32/f64 property only: the slot path rounds its
+    bf16 combine at the pallas-call input boundary, while the in-kernel
+    combine feeds the dot inside one XLA computation, where float
+    normalization may (and on CPU does) keep the bf16 adds at f32 precision
+    — strictly *more* accurate, never bitwise. So bf16 asserts the combine
+    is at least operand-precision against the f32 oracle, plus the flush
+    cast contract."""
+    from repro.core.strassen import _pad_root, _slot_tables, _to_blocks
+    from repro.kernels import ops
+
+    r = np.random.default_rng(30)
+    a = _pad_root(jnp.asarray(r.standard_normal((128, 96)), jnp.bfloat16), 1)
+    b = _pad_root(jnp.asarray(r.standard_normal((128, 64)), jnp.bfloat16), 1)
+    blocks = (64, 64, 64)
+    got = ops.gemm_tn_fused(
+        _to_blocks(a, 1)[None], _to_blocks(b, 1)[None], _slot_tables(1),
+        blocks=blocks, interpret=True,
+    )
+    assert got.dtype == jnp.float32
+    want = _slot_path(
+        a.astype(jnp.float32), b.astype(jnp.float32), 1, blocks
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-1)
+    # and the slot path in bf16 lands within the same band of the oracle
+    slot = _slot_path(a, b, 1, blocks)
+    np.testing.assert_allclose(np.asarray(slot), np.asarray(want),
+                               rtol=2e-2, atol=2e-1)
+    lo = ops.gemm_tn_fused(
+        _to_blocks(a, 1)[None], _to_blocks(b, 1)[None], _slot_tables(1),
+        blocks=blocks, interpret=True, out_dtype=jnp.bfloat16,
+    )
+    assert lo.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(lo, np.float32), np.asarray(got), rtol=2e-2, atol=2e-1
+    )
+
+
+@pytest.mark.parametrize("L", [1, 2])
+def test_syrk_gather_bitwise_vs_stacked_syrk(L):
+    """The diagonal half of the contract: gathering leaf pairs through the
+    index maps equals stacking them first and running the batched syrk —
+    the stack is simply never built."""
+    from repro.core.strassen import _to_blocks
+    from repro.kernels import ops
+
+    r = np.random.default_rng(40 + L)
+    a = jnp.asarray(r.standard_normal((256, 256)), jnp.float32)
+    ab = _to_blocks(a, L)
+    R = 1 << L
+    s = np.arange(R * R, dtype=np.int32)
+    stacked = jnp.swapaxes(ab, 0, 1).reshape(R * R, *ab.shape[-2:])
+    want = syrk(stacked, blocks=(128, 64), interpret=True)
+    got = ops.syrk_gather(ab, s % R, s // R, blocks=(128, 64), interpret=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_syrk_gather_batched_grid():
+    from repro.core.strassen import _to_blocks
+    from repro.kernels import ops
+
+    r = np.random.default_rng(42)
+    a = jnp.asarray(r.standard_normal((2, 128, 128)), jnp.float32)
+    ab = _to_blocks(a, 1)
+    s = np.arange(4, dtype=np.int32)
+    stacked = jnp.swapaxes(ab, 0, 1).reshape(4, 2, *ab.shape[-2:])
+    want = syrk(
+        stacked.reshape(-1, *ab.shape[-2:]), blocks=(64, 64), interpret=True
+    ).reshape(4, 2, ab.shape[-1], ab.shape[-1])
+    got = ops.syrk_gather(ab, s % 2, s // 2, blocks=(64, 64), interpret=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_fused_leaves_with_pallas_kernels_end_to_end():
+    """A use_kernels fused plan runs the whole recursion through ONE fused
+    launch per level — bitwise with the unrolled kernel dispatch on the
+    same plan, for strassen_tn and both ata output modes (odd shapes)."""
+    import dataclasses
+
+    from repro.core import ata, strassen_tn
+    from repro.tune import cost
+
+    r = np.random.default_rng(50)
+
+    def mk(op, m, n, k, ld, **kw):
+        return dataclasses.replace(
+            cost.default_plan(op, m, n, k), algorithm="strassen", n_base=64,
+            use_kernels=True, leaf_dispatch=ld, **kw,
+        )
+
+    a = jnp.asarray(r.standard_normal((300, 260)), jnp.float32)
+    du = ata(a, plan=mk("ata", 300, 260, None, "unrolled"))
+    df = ata(a, plan=mk("ata", 300, 260, None, "fused"))
+    np.testing.assert_array_equal(np.asarray(du), np.asarray(df))
+    np.testing.assert_allclose(df, a.T @ a, rtol=2e-4, atol=2e-4)
+    pf = ata(a, plan=mk("ata", 300, 260, None, "fused", out="packed"),
+             out="packed")
+    np.testing.assert_array_equal(np.asarray(pf.to_dense()), np.asarray(du))
+
+    b = jnp.asarray(r.standard_normal((300, 200)), jnp.float32)
+    gu = strassen_tn(a, b, plan=mk("gemm_tn", 300, 260, 200, "unrolled"))
+    gf = strassen_tn(a, b, plan=mk("gemm_tn", 300, 260, 200, "fused"))
+    np.testing.assert_array_equal(np.asarray(gu), np.asarray(gf))
+    np.testing.assert_allclose(gf, a.T @ b, rtol=2e-4, atol=2e-4)

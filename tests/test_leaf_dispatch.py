@@ -1,19 +1,22 @@
-"""Batched-leaf dispatch: bitwise parity with the unrolled recursion,
-jaxpr-size regression, and plan threading.
+"""Batched- and fused-leaf dispatch: bitwise parity with the unrolled
+recursion, jaxpr-size regressions, and plan threading.
 
-The acceptance contract of the batched-leaf PR:
+The acceptance contract of the batched-leaf and fused-leaf PRs:
 
-* ``leaf_dispatch='batched'`` is **bitwise-equal** to ``'unrolled'`` on the
-  same plan, for ``strassen_tn``/``ata``/``ata_batched``, across odd and
-  rectangular shapes, both variants, dense and packed output, and
-  alpha/c/beta accumulation;
+* ``leaf_dispatch='batched'`` and ``'fused'`` are **bitwise-equal** to
+  ``'unrolled'`` on the same plan, for ``strassen_tn``/``ata``/
+  ``ata_batched``, across odd and rectangular shapes, dense and packed
+  output, and alpha/c/beta accumulation (batched: both variants; fused:
+  classical only — winograd raises);
 * the batched dispatch emits **O(levels)** dots (one batched TN gemm + one
-  batched syrk for the whole ATA tree), not O(7^L) — a jaxpr-size
-  regression test;
+  batched syrk for the whole ATA tree), not O(7^L); the fused dispatch
+  emits one dot per leaf but **zero materialized operand-add stacks** —
+  both jaxpr regression tests;
 * the planner carries the choice (``Plan.leaf_dispatch``): candidates
-  enumerate it, JSON round-trips it, pre-leaf_dispatch cache entries
-  deserialize to ``'unrolled'``, and the overhead pricing makes the two
-  dispatches distinguishable to the analytic model.
+  enumerate all three (fused for classical Strassen only), JSON
+  round-trips it, pre-leaf_dispatch cache entries deserialize to
+  ``'unrolled'``, and the overhead pricing makes the dispatches
+  distinguishable to the analytic model.
 """
 
 import dataclasses
@@ -152,6 +155,105 @@ def test_batched_under_jit_and_grad():
 
 
 # ---------------------------------------------------------------------------
+# fused dispatch parity (XLA slot-gather path; the kernel launch path is
+# covered by test_kernels.py's coefficient-table section)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,n,k",
+    [
+        (64, 64, 64),
+        (128, 96, 80),   # rectangular
+        (67, 53, 41),    # odd everywhere -> root pad, cropped leaves
+        (100, 200, 50),  # tall/wide mix
+        (33, 1, 7),      # degenerate (L = 0: every dispatch IS one dot)
+    ],
+)
+def test_strassen_fused_bitwise_equals_unrolled(m, n, k):
+    r = rng(hash(("fused", m, n, k)) % 2**32)
+    a = jnp.asarray(r.standard_normal((m, n)))
+    b = jnp.asarray(r.standard_normal((m, k)))
+    kw = dict(n_base=8, variant="strassen", acc_dtype=jnp.float64)
+    _bitwise(
+        strassen_tn(a, b, leaf_dispatch="unrolled", **kw),
+        strassen_tn(a, b, leaf_dispatch="fused", **kw),
+    )
+
+
+def test_strassen_fused_alpha_beta_accumulate_bitwise():
+    r = rng(21)
+    a = jnp.asarray(r.standard_normal((32, 24)))
+    b = jnp.asarray(r.standard_normal((32, 40)))
+    c = jnp.asarray(r.standard_normal((24, 40)))
+    kw = dict(alpha=2.5, c=c, beta=-0.5, n_base=8, variant="strassen",
+              acc_dtype=jnp.float64)
+    got = strassen_tn(a, b, leaf_dispatch="fused", **kw)
+    _bitwise(strassen_tn(a, b, leaf_dispatch="unrolled", **kw), got)
+    np.testing.assert_allclose(got, 2.5 * (a.T @ b) - 0.5 * c, rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("m,n", [(64, 64), (67, 53), (200, 100), (257, 129)])
+def test_ata_fused_leaf_bitwise_equals_unrolled(m, n):
+    r = rng(hash(("fused", m, n)) % 2**32)
+    a = jnp.asarray(r.standard_normal((m, n)))
+    kw = dict(n_base=8, variant="strassen", acc_dtype=jnp.float64)
+    dense_u = ata(a, leaf_dispatch="unrolled", **kw)
+    dense_f = ata(a, leaf_dispatch="fused", **kw)
+    _bitwise(dense_u, dense_f)
+    np.testing.assert_allclose(dense_f, a.T @ a, rtol=1e-9, atol=1e-9)
+    pu = ata(a, leaf_dispatch="unrolled", out="packed", packed_block=32, **kw)
+    pf = ata(a, leaf_dispatch="fused", out="packed", packed_block=32, **kw)
+    _bitwise(pu.blocks, pf.blocks)
+    _bitwise(pf.to_dense(), dense_f)
+
+
+@pytest.mark.parametrize("B", [1, 5])
+@pytest.mark.parametrize("out", ["dense", "packed"])
+def test_ata_batched_op_fused_bitwise(B, out):
+    """The (B, m, n) gram entry point — including the B=1 leading dim the
+    fused level grids must carry through their batch axis."""
+    r = rng(22 + B)
+    a = jnp.asarray(r.standard_normal((B, 48, 28)))
+    kw = dict(n_base=8, variant="strassen", acc_dtype=jnp.float64, out=out)
+    if out == "packed":
+        kw["packed_block"] = 16
+    u = ata_batched(a, leaf_dispatch="unrolled", **kw)
+    f = ata_batched(a, leaf_dispatch="fused", **kw)
+    if out == "packed":
+        _bitwise(u.blocks, f.blocks)
+    else:
+        _bitwise(u, f)
+        np.testing.assert_allclose(
+            f, jnp.einsum("bmi,bmj->bij", a, a), rtol=1e-9, atol=1e-9
+        )
+
+
+def test_fused_requires_classical_variant():
+    """The slot tables encode the 7-term classical combos; winograd's
+    chained within-level sums have no per-leaf ±1 table, so the fused
+    dispatch refuses rather than silently switching algorithms."""
+    a = jnp.zeros((32, 32))
+    with pytest.raises(ValueError, match="fused"):
+        strassen_tn(a, a, n_base=8, variant="winograd", leaf_dispatch="fused")
+    with pytest.raises(ValueError, match="fused"):
+        ata(a, n_base=8, variant="winograd", leaf_dispatch="fused")
+
+
+def test_fused_under_jit_and_grad():
+    r = rng(23)
+    a = jnp.asarray(r.standard_normal((64, 48)))
+    kw = dict(n_base=16, variant="strassen", acc_dtype=jnp.float64)
+    f = jax.jit(lambda a: ata(a, leaf_dispatch="fused", **kw))
+    _bitwise(f(a), ata(a, leaf_dispatch="unrolled", **kw))
+    g = jax.grad(
+        lambda a: strassen_tn(a, a, leaf_dispatch="fused", **kw).sum()
+    )(a)
+    g_ref = jax.grad(lambda a: (a.T @ a).sum())(a)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-9, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
 # jaxpr-size regression: O(levels) dots, not O(7^L)
 # ---------------------------------------------------------------------------
 
@@ -211,6 +313,54 @@ def test_batched_jaxpr_total_size_grows_linearly_not_geometrically():
     assert b3 < u3 / 10
 
 
+def _walk_shapes(jaxpr, shapes):
+    for e in jaxpr.eqns:
+        shapes.extend(tuple(v.aval.shape) for v in e.outvars)
+        for p in e.params.values():
+            for q in p if isinstance(p, (tuple, list)) else (p,):
+                inner = getattr(q, "jaxpr", q)
+                if hasattr(inner, "eqns"):
+                    _walk_shapes(inner, shapes)
+
+
+def test_fused_jaxpr_one_dot_per_leaf_and_zero_operand_stacks():
+    """The fused XLA path's acceptance property: every leaf is its own dot
+    (the combines happen per-leaf at trace time, 7^L dots total) and NO
+    operand-combination stack is ever materialized — no equation in the
+    jaxpr produces an array of A-operand or B-operand leaf-stack shape.
+    Rectangular dims keep the operand block shapes distinguishable from
+    the product/decode shapes; the batched dispatch's jaxpr contains both
+    operand stacks, which keeps the assertion honest."""
+    m, n, k, n_base = 96, 32, 16, 4   # L = 2 -> 49 leaves
+    a = jnp.zeros((m, n), jnp.float32)
+    b = jnp.zeros((m, k), jnp.float32)
+    mb, nb, kb = m // 4, n // 4, k // 4
+
+    def shapes(ld):
+        jaxpr = jax.make_jaxpr(
+            lambda x, y: strassen_tn(
+                x, y, n_base=n_base, variant="strassen", leaf_dispatch=ld
+            )
+        )(a, b)
+        out = []
+        _walk_shapes(jaxpr.jaxpr, out)
+        return out
+
+    n_dots = _dot_count(
+        lambda x, y: strassen_tn(
+            x, y, n_base=n_base, variant="strassen", leaf_dispatch="fused"
+        ),
+        a, b,
+    )
+    assert n_dots == 49, n_dots
+    a_stack, b_stack = (49, mb, nb), (49, mb, kb)
+    fused = shapes("fused")
+    assert a_stack not in fused and b_stack not in fused
+    assert (49, nb, kb) in fused          # the product stack IS materialized
+    batched = shapes("batched")
+    assert a_stack in batched and b_stack in batched
+
+
 # ---------------------------------------------------------------------------
 # planner threading
 # ---------------------------------------------------------------------------
@@ -229,27 +379,51 @@ def test_candidates_enumerate_leaf_dispatch():
     lds = {(c.algorithm, c.leaf_dispatch) for c in cands}
     assert any(ld == "batched" for _, ld in lds)
     assert any(ld == "unrolled" for _, ld in lds)
-    # dense has nothing to batch
+    # fused is enumerated for the classical variant only: the slot tables
+    # encode the 7-term classical combos (winograd's chained within-level
+    # sums raise in core.strassen), and dense has nothing to batch or fuse
+    assert ("strassen", "fused") in lds
+    assert ("winograd", "fused") not in lds
+    assert ("dense", "fused") not in lds
     assert ("dense", "batched") not in lds
 
 
 def test_overhead_pricing_separates_the_dispatches():
     """With thousands of leaves, unrolled must be priced above batched on
-    every machine model (that is the term the batched dispatch removes)."""
+    the machine models whose stack charge is the nominal write+read (that
+    is the launch-overhead term the batched dispatch removes). The cpu
+    model is the deliberate exception since the fused-leaf recalibration:
+    its measured stack_word_cost (≈5.5, cache-thrash dominated) outweighs
+    even 7^6 thunk launches at depth 6 — matching the measured cpu ranking
+    where deep batched trails deep unrolled. Fused must undercut batched
+    in its shallow regime (the fig-4 bench shapes live at 1–2 levels):
+    same O(levels) launches, zero materialized stacks — while at depth 6
+    its 3^L slot-gather amplification prices it out, as measured."""
     for backend in ("cpu", "tpu", "gpu"):
-        pu = cost.predict_seconds(
-            "gemm_tn", "strassen", 8192, 8192, 8192, 128,
-            backend=backend, leaf_dispatch="unrolled",
-        )
-        pb = cost.predict_seconds(
-            "gemm_tn", "strassen", 8192, 8192, 8192, 128,
-            backend=backend, leaf_dispatch="batched",
+        pu, pb = (
+            cost.predict_seconds(
+                "gemm_tn", "strassen", 8192, 8192, 8192, 128,
+                backend=backend, leaf_dispatch=ld,
+            )
+            for ld in ("unrolled", "batched")
         )
         calls = cost.dispatch_calls(
             "gemm_tn", "strassen", 8192, 8192, 8192, 128, "unrolled"
         )
         assert calls == 7 ** 6
-        assert pu > pb, backend
+        if backend == "cpu":
+            assert pb > pu, backend  # recalibrated: stacks beat launches
+        else:
+            assert pu > pb, backend
+    for backend in ("cpu", "tpu"):  # gpu's untuned model keeps them tied
+        pb1, pf1 = (
+            cost.predict_seconds(
+                "gemm_tn", "strassen", 8192, 8192, 8192, 4096,
+                backend=backend, leaf_dispatch=ld,
+            )
+            for ld in ("batched", "fused")
+        )
+        assert pf1 < pb1, backend
 
 
 def test_dispatch_calls_counts():
@@ -259,6 +433,12 @@ def test_dispatch_calls_counts():
     assert cost.dispatch_calls("gemm_tn", "strassen", 1024, 1024, 1024, 256, "batched") == 10
     s, g = cost._ata_leaves(1024, 1024, 256)
     assert cost.dispatch_calls("ata", "strassen", 1024, 1024, 1024, 256, "unrolled") == s + g
+    # fused: one launch per LEVEL, never per leaf — one fused leaf launch
+    # + one decode pass per level for Strassen; gathered diagonal syrk +
+    # per-level fused dot + per-level decode for ATA
+    assert cost.dispatch_calls("gemm_tn", "strassen", 1024, 1024, 1024, 256, "fused") == 3
+    assert cost.dispatch_calls("gemm_tn", "strassen", 1024, 1024, 1024, 512, "fused") == 2
+    assert cost.dispatch_calls("ata", "strassen", 1024, 1024, 1024, 256, "fused") == 6
 
 
 def test_plan_json_roundtrip_and_legacy_entries(_fresh_memo):
@@ -281,6 +461,9 @@ def test_autotuner_distinguishes_leaf_dispatch():
     base = cost.default_plan("ata", 512, 512)
     flipped = dataclasses.replace(base, leaf_dispatch="batched")
     assert not _same_dispatch(base, flipped)
+    fused = dataclasses.replace(base, leaf_dispatch="fused")
+    assert not _same_dispatch(base, fused)
+    assert not _same_dispatch(flipped, fused)
 
 
 def test_ata_honors_plan_leaf_dispatch_bitwise(_fresh_memo):
@@ -296,6 +479,8 @@ def test_ata_honors_plan_leaf_dispatch_bitwise(_fresh_memo):
     by_hand = ata(a, n_base=64, variant="strassen", leaf_dispatch="batched")
     _bitwise(via_plan, by_hand)
     _bitwise(via_plan, ata(a, n_base=64, variant="strassen", leaf_dispatch="unrolled"))
+    p_fused = dataclasses.replace(p, leaf_dispatch="fused")
+    _bitwise(ata(a, plan=p_fused), via_plan)
 
 
 def test_root_pad_hoist_depth_matches_legacy_recursion():

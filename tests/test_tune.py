@@ -161,33 +161,68 @@ def test_corrupt_cache_entries_are_skipped_not_fatal(tmp_path):
     assert served.source == "cache"
 
 
-def test_pre_solve_v1_cache_file_still_loads_and_serves(tmp_path):
-    """Regression (schema v1→v2 bump, op='solve' PR): a pre-PR-5 cache file
-    — v1 schema tag, v1-prefixed keys, Plan entries WITHOUT the `method`
-    field — must keep loading and serving its measured plans (same
-    tolerance contract as the corrupt-entry fix: never fatal)."""
-    path = str(tmp_path / "v1.json")
+def test_old_schema_cache_files_still_load_and_serve(tmp_path):
+    """Regression (schema bumps v1→v2 op='solve', v2→v3 fused leaves): an
+    old cache file — old schema tag, old-prefixed keys, Plan entries
+    WITHOUT later fields — must keep loading and serving its measured
+    plans (same tolerance contract as the corrupt-entry fix: never
+    fatal)."""
+    key_now = plan_key("ata", 640, 640, 640, 0, "float32", "dense", "cpu")
+    assert key_now.startswith("v3|")
+    for old in ("v1", "v2"):
+        path = str(tmp_path / f"{old}.json")
+        p = dataclasses.replace(
+            tune.plan(op="ata", m=640, n=640), n_base=128,
+            source="measured", measured_s=1e-3,
+        )
+        key_old = old + "|" + key_now.split("|", 1)[1]
+        entry = p.to_json()
+        if old == "v1":
+            del entry["method"]  # the field did not exist pre-PR-5
+        with open(path, "w") as f:
+            json.dump({"schema": old, "plans": {key_old: entry}}, f)
+
+        loaded = load_cache(path)
+        # the old key migrates to the current prefix, missing fields default
+        assert set(loaded) == {key_now}
+        if old == "v1":
+            assert loaded[key_now].method is None
+        assert loaded[key_now].n_base == 128
+
+        tune.cache.clear_memo()
+        served = tune.plan(op="ata", m=640, n=640, cache_file=path)
+        assert served.source == "cache" and served.n_base == 128
+
+
+def test_unknown_leaf_dispatch_in_cache_falls_back_to_unrolled(tmp_path):
+    """Regression (fused-leaf PR hardening): a cache entry written by a
+    *future* schema may carry a leaf_dispatch this revision has never heard
+    of. Loading must sanitize it to 'unrolled' (always valid, bitwise-
+    identical output), not raise at every planned dispatch — the same
+    never-fatal contract as the corrupt-entry tolerance."""
+    path = str(tmp_path / "future.json")
     p = dataclasses.replace(
-        tune.plan(op="ata", m=640, n=640), n_base=128,
-        source="measured", measured_s=1e-3,
+        tune.plan(op="ata", m=640, n=640), n_base=256,
+        leaf_dispatch="hypercube", source="measured", measured_s=1e-3,
     )
-    key_v2 = plan_key("ata", 640, 640, 640, 0, "float32", "dense", p.backend)
-    assert key_v2.startswith("v2|")
-    key_v1 = "v1|" + key_v2.split("|", 1)[1]
-    entry = p.to_json()
-    del entry["method"]  # the field did not exist pre-PR-5
+    key = plan_key("ata", 640, 640, 640, 0, "float32", "dense", p.backend)
     with open(path, "w") as f:
-        json.dump({"schema": "v1", "plans": {key_v1: entry}}, f)
+        json.dump({"schema": "v3", "plans": {key: p.to_json()}}, f)
 
     loaded = load_cache(path)
-    # the v1 key is migrated to the v2 prefix, the missing field defaults
-    assert set(loaded) == {key_v2}
-    assert loaded[key_v2].method is None
-    assert loaded[key_v2].n_base == 128
+    assert loaded[key].leaf_dispatch == "unrolled"
+    assert loaded[key].n_base == 256  # the rest of the entry survives
 
+    # and the front door serves a plan the recursion actually accepts
     tune.cache.clear_memo()
     served = tune.plan(op="ata", m=640, n=640, cache_file=path)
-    assert served.source == "cache" and served.n_base == 128
+    assert served.source == "cache" and served.leaf_dispatch == "unrolled"
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.standard_normal((96, 80)), jnp.float32)
+    got = ata(a, plan=served)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(a.T @ a), rtol=2e-4, atol=2e-4
+    )
 
 
 # --- autotune ---------------------------------------------------------------
