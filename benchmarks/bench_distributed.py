@@ -77,6 +77,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import make_mesh, shard_map
 from repro.analysis.hlo import collective_bytes
 from repro.core.distributed import ata_tile_parallel, gram_rowshard
+from repro.obs import metrics as obs_metrics
 m, n = @M@, @N@
 mesh = make_mesh((2, 4), ("data", "model"))
 a_abs = jax.ShapeDtypeStruct((m, n), jnp.float32)
@@ -89,6 +90,7 @@ for mode in ("dense", "packed"):
         in_shardings=(sh,),
     )
     hlo = f.lower(a_abs).compile().as_text()
+    obs_metrics.record_collective_bytes(hlo, prefix="collective_bytes.tile_" + mode)
     out["tile_" + mode] = collective_bytes(hlo)
 row_abs = jax.ShapeDtypeStruct((m, n), jnp.float32)
 for mode in ("dense", "packed"):
@@ -98,6 +100,7 @@ for mode in ("dense", "packed"):
         mesh=make_mesh((8,), ("data",)),
         in_specs=(P("data", None),), out_specs=out_spec))
     hlo = f.lower(row_abs).compile().as_text()
+    obs_metrics.record_collective_bytes(hlo, prefix="collective_bytes.rowshard_" + mode)
     out["rowshard_" + mode] = collective_bytes(hlo)
 print("BYTES " + json.dumps(out))
 """

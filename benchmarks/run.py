@@ -10,10 +10,18 @@ across PRs.
     PYTHONPATH=src python -m benchmarks.run fig3 fig5  # filter by prefix
     PYTHONPATH=src python -m benchmarks.run --out results/bench
     PYTHONPATH=src python -m benchmarks.run --smoke    # CI-scale subset
+    PYTHONPATH=src python -m benchmarks.run --profile  # + obs & traces
 
 ``--smoke`` shrinks every module's shape sweep/iteration count
 (``common.smoke()``) and skips the subprocess-per-device-count modules
 (fig5/fig6) — minutes of wall time instead of tens.
+
+``--profile`` turns the ``repro.obs`` subsystem on for the whole run and
+wraps each bench module in ``jax.profiler.trace`` (guarded: containers
+whose jax build lacks a working profiler just skip the trace, never
+crash), writing trace artifacts under ``<out>/benchmarks/profiles/<key>/``
+and one ``BENCH_obs.json`` metrics+calibration snapshot for the run; the
+calibration drift report prints at the end (DESIGN.md §8).
 
 After each module, fresh rows are diffed against the **committed**
 ``BENCH_<key>.json`` baseline (``repro.analysis.perf_diff.bench_diff``)
@@ -72,20 +80,64 @@ def _report_diff(key: str, rows: list) -> None:
         print(f"# perf diff for {key} unavailable: {type(e).__name__}: {e}")
 
 
+class _profile_trace:
+    """``jax.profiler.trace`` for one bench module, tolerated to fail.
+
+    Interpret-mode CPU containers (and stripped jax builds) can lack a
+    working profiler backend; a profiling *bench* run must still produce
+    its timing rows, so any profiler error downgrades to a note.
+    """
+
+    def __init__(self, log_dir: str):
+        self.log_dir = log_dir
+        self._active = False
+
+    def __enter__(self):
+        try:
+            import jax
+
+            os.makedirs(self.log_dir, exist_ok=True)
+            jax.profiler.start_trace(self.log_dir)
+            self._active = True
+        except Exception as e:
+            print(f"# profiler trace unavailable: {type(e).__name__}: {e}")
+        return self
+
+    def __exit__(self, *exc):
+        if self._active:
+            try:
+                import jax
+
+                jax.profiler.stop_trace()
+            except Exception as e:
+                print(f"# profiler stop failed: {type(e).__name__}: {e}")
+        return False
+
+
 def main() -> None:
     args = sys.argv[1:]
     out_dir = "."
+    profile = False
     if "--smoke" in args:
         args.remove("--smoke")
         common.SMOKE = True
         os.environ["REPRO_BENCH_SMOKE"] = "1"  # reaches bench subprocesses
+    if "--profile" in args:
+        args.remove("--profile")
+        profile = True
     if "--out" in args:
         i = args.index("--out")
         if i + 1 >= len(args) or args[i + 1].startswith("-"):
-            raise SystemExit("usage: benchmarks.run [--smoke] [--out DIR] [filter ...]")
+            raise SystemExit(
+                "usage: benchmarks.run [--smoke] [--profile] [--out DIR] [filter ...]"
+            )
         out_dir = args[i + 1]
         args = args[:i] + args[i + 2 :]
         os.makedirs(out_dir, exist_ok=True)
+    if profile:
+        from repro import obs
+
+        obs.enable()
     filters = [a for a in args if not a.startswith("-")]
     print("name,us_per_call,derived")
     failed = []
@@ -100,7 +152,12 @@ def main() -> None:
         path = os.path.join(out_dir, f"BENCH_{key}.json")
         try:
             mod = __import__(module, fromlist=["run"])
-            mod.run()
+            if profile:
+                profile_dir = os.path.join(out_dir, "benchmarks", "profiles", key)
+                with _profile_trace(profile_dir):
+                    mod.run()
+            else:
+                mod.run()
         except Exception as e:
             failed.append(name)
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
@@ -117,6 +174,13 @@ def main() -> None:
         with open(path, "w") as f:
             json.dump({"rows": rows}, f, indent=1)
         print(f"# wrote {path} ({len(rows)} rows)", flush=True)
+    if profile:
+        from repro import obs
+
+        obs_path = os.path.join(out_dir, "BENCH_obs.json")
+        obs.metrics.export_json(obs_path)
+        print(f"# wrote {obs_path}", flush=True)
+        print(obs.report(), flush=True)
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

@@ -5,7 +5,8 @@ the documented entry point), plain ``alpha·AᵀA`` vs the classical product,
 the rectangular FastStrassen ``AᵀB``, flop accounting (the paper's
 2/3-of-Strassen claim), packed-native least squares (plan → ata →
 ``solve.lstsq`` — the gram is factored and solved without ever being
-densified), and the Pallas kernel base case.
+densified), the Pallas kernel base case, and the ``repro.obs``
+observability switch (spans + metrics snapshot + calibration drift).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import solve, tune
+from repro import obs, solve, tune
 from repro.core import ata, strassen_tn
 from repro.core.reference import (
     ata_flops,
@@ -92,6 +93,25 @@ def main():
     c_k = ata(a_small, plan=pk)  # base_syrk/base_dot built from the plan
     print(f"ata with Pallas base (interpret on CPU): max err = "
           f"{float(jnp.abs(c_k - a_small.T @ a_small).max()):.2e}")
+
+    # --- 7. observability: obs.enable() → ata → metrics snapshot ------------
+    # Counters (dispatch/leaf/cache accounting) are always on; enable() adds
+    # spans (named_scope regions per recursion level, zero jaxpr ops) and
+    # per-dispatch calibration of the cost model's predicted_s against wall
+    # clock. Disabled, every instrumented path is bitwise-identical.
+    obs.enable()
+    # a recursing batched plan so the per-level spans have levels to name
+    pr = dataclasses.replace(p, n_base=128, leaf_dispatch="batched",
+                             source="analytic")
+    _ = ata(a, plan=pr, out="packed")  # eager: times itself vs predicted_s
+    snap = obs.metrics.snapshot()  # JSON-ready, schema "repro.obs/v1"
+    obs.metrics.validate_snapshot(snap)
+    print(f"obs: dispatch.ata.* counters = "
+          f"{ {k: v for k, v in snap['counters'].items() if k.startswith('dispatch.ata')} }, "
+          f"spans = {sorted(snap['spans'])}, "
+          f"calibration rows = {len(snap['calibration'])}")
+    print(obs.report())  # predicted-vs-measured drift table (DESIGN.md §8)
+    obs.disable()
 
 
 if __name__ == "__main__":

@@ -6,7 +6,11 @@ result-buffer bytes of every collective op, keyed by op kind. Bytes are
 matches the per-device flop/byte numbers from ``compiled.cost_analysis()``.
 
 Handles plain and async (``-start``/``-done``) forms — only starts are
-counted — and tuple-shaped results (variadic collectives).
+counted — and tuple-shaped results. A plain variadic collective's tuple
+elements are all payload and sum; an async ``-start`` whose result is a
+tuple follows HLO's ``(operand, result[, contexts…])`` convention, so only
+element 1 — the actual transferred buffer — is counted (summing would
+double-count the payload via its operand alias).
 """
 
 from __future__ import annotations
@@ -53,13 +57,42 @@ def _shape_bytes(type_str: str) -> int:
     return total
 
 
+def _tuple_elems(type_str: str):
+    """Top-level elements of a parenthesized tuple type, or ``None`` for a
+    non-tuple result. Splits on commas outside ``[]``/``{}`` (shape dims and
+    layouts carry commas of their own)."""
+    if not (type_str.startswith("(") and type_str.endswith(")")):
+        return None
+    elems, depth, cur = [], 0, []
+    for ch in type_str[1:-1]:
+        if ch in "[{":
+            depth += 1
+        elif ch in "]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            elems.append("".join(cur))
+            cur = []
+            continue
+        cur.append(ch)
+    elems.append("".join(cur))
+    return elems
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Per-device result bytes of every collective, keyed by kind."""
     out: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
     for m in _INSTR_RE.finditer(hlo_text):
         if m.group("suffix") == "-done":
             continue  # counted at -start
-        out[m.group("op")] += _shape_bytes(m.group("result"))
+        result = m.group("result")
+        if m.group("suffix") == "-start":
+            # async tuple result is (operand, result[, contexts…]): count
+            # the transferred buffer only, not its aliased operand
+            elems = _tuple_elems(result)
+            if elems is not None and len(elems) >= 2:
+                out[m.group("op")] += _shape_bytes(elems[1])
+                continue
+        out[m.group("op")] += _shape_bytes(result)
     return out
 
 

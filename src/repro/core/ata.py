@@ -64,6 +64,7 @@ from typing import Callable, NamedTuple, Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.strassen import (
     DEFAULT_N_BASE,
     _combine_slots,
@@ -133,10 +134,11 @@ def _rec_ata(slabs, n_base, base_syrk, strassen_rec, base_dot, acc_dtype):
     n = slabs[0].shape[-1]
     m_max = max(s.shape[-2] for s in slabs)
     if n <= n_base or m_max <= n_base:
-        out = base_syrk(slabs[0])
-        for s in slabs[1:]:
-            out = out + base_syrk(s)
-        return out
+        with obs.span("ata.rec.base", n=n, slabs=len(slabs)):
+            out = base_syrk(slabs[0])
+            for s in slabs[1:]:
+                out = out + base_syrk(s)
+            return out
 
     halves = []
     for s in slabs:
@@ -160,12 +162,13 @@ def _rec_ata(slabs, n_base, base_syrk, strassen_rec, base_dot, acc_dtype):
         strassen_rec, n_base=n_base, base_dot=base_dot, acc_dtype=acc_dtype
     )
 
-    c11 = rec(left)
-    c22 = rec(right)
-    c21 = st(right[0], left[0])
-    for r, l in zip(right[1:], left[1:]):
-        c21 = c21 + st(r, l)
-    return _TriNode(c11, c21, c22)
+    with obs.span(f"ata.rec.n{n}", slabs=len(slabs)):
+        c11 = rec(left)
+        c22 = rec(right)
+        c21 = st(right[0], left[0])
+        for r, l in zip(right[1:], left[1:]):
+            c21 = c21 + st(r, l)
+        return _TriNode(c11, c21, c22)
 
 
 # ---------------------------------------------------------------------------
@@ -252,6 +255,7 @@ def _ata_level_sync(a, L, *, variant, base_syrk, base_dot,
     parts_a, parts_b, sizes = [], [], []
     P_levels = [] if fused else None
     for lev in range(1, L + 1):
+      with obs.span(f"ata.encode.L{lev}", fused=fused):
         Rl, H = 1 << lev, 1 << (lev - 1)
         q = R // Rl
         if fused and fused_dot is None:
@@ -274,7 +278,8 @@ def _ata_level_sync(a, L, *, variant, base_syrk, base_dot,
         if fused:
             # one fused Pallas launch per level: the ±1 combinations run in
             # the kernel prologue against these block grids
-            P_levels.append(fused_dot(A, B, _slot_tables(L - lev)))
+            with obs.span(f"ata.fused_dot.L{lev}", leaves=A.shape[0] * 7 ** (L - lev)):
+                P_levels.append(fused_dot(A, B, _slot_tables(L - lev)))
             sizes.append(A.shape[0] * 7 ** (L - lev))
             continue
         enc, _ = _encode_fns(variant)
@@ -284,11 +289,12 @@ def _ata_level_sync(a, L, *, variant, base_syrk, base_dot,
         parts_b.append(B[:, 0, 0])
         sizes.append(A.shape[0])
     if P_levels is None:
-        P = _leaf_dot(
-            base_dot,
-            jnp.concatenate(parts_a, axis=0),
-            jnp.concatenate(parts_b, axis=0),
-        )
+        with obs.span("ata.leaf_dot", leaves=sum(sizes)):
+            P = _leaf_dot(
+                base_dot,
+                jnp.concatenate(parts_a, axis=0),
+                jnp.concatenate(parts_b, axis=0),
+            )
         P_levels = []
         off = 0
         for size in sizes:
@@ -296,16 +302,17 @@ def _ata_level_sync(a, L, *, variant, base_syrk, base_dot,
             off += size
 
     # all diagonal leaves as one batched syrk, ordered (column block i, slab r)
-    if fused and fused_syrk is not None:
-        # gather prologue: the kernel pulls each slab straight out of the
-        # block-major layout by its (row, col) index table — no copy of D
-        import numpy as np
+    with obs.span("ata.syrk_batch", leaves=R * R, fused=fused):
+        if fused and fused_syrk is not None:
+            # gather prologue: the kernel pulls each slab straight out of the
+            # block-major layout by its (row, col) index table — no copy of D
+            import numpy as np
 
-        s = np.arange(R * R, dtype=np.int32)
-        Dp = fused_syrk(ab, s % R, s // R)
-    else:
-        D = jnp.swapaxes(ab, 0, 1).reshape(R * R, *batch, mL, nL)
-        Dp = base_syrk(D.reshape(-1, mL, nL))
+            s = np.arange(R * R, dtype=np.int32)
+            Dp = fused_syrk(ab, s % R, s // R)
+        else:
+            D = jnp.swapaxes(ab, 0, 1).reshape(R * R, *batch, mL, nL)
+            Dp = base_syrk(D.reshape(-1, mL, nL))
     Dp = Dp.reshape(R, R, *batch, *Dp.shape[-2:])
     diag = _accum_axis1(Dp)  # (2^L, *batch, nL, nL)
 
@@ -313,6 +320,7 @@ def _ata_level_sync(a, L, *, variant, base_syrk, base_dot,
     # levels back up, fold the slab sum in block form, then unblock
     c21 = {}
     for lev, p in zip(range(1, L + 1), P_levels):
+      with obs.span(f"ata.decode.L{lev}"):
         p = p[:, None, None]
         for _ in range(L - lev):
             p = dec(p)
@@ -451,45 +459,58 @@ def _ata_impl(
 
     n = a.shape[-1]
     L = tree_depth(a.shape[-2:], n_base)
-    ap = _pad_root(a, L) if L else a
-    if leaf_dispatch in ("batched", "fused"):
-        node = _ata_level_sync(
-            ap, L, variant=variant, base_syrk=base_syrk, base_dot=base_dot,
-            fused=leaf_dispatch == "fused",
-            fused_syrk=fused_syrk, fused_dot=fused_dot_kernel,
-        )
-    else:
-        strassen_rec = _rec_strassen if variant == "strassen" else _rec_winograd
-        node = _rec_ata(
-            [ap],
-            n_base=n_base,
-            base_syrk=base_syrk,
-            strassen_rec=strassen_rec,
-            base_dot=base_dot,
-            acc_dtype=acc_dtype,
-        )
+    obs.metrics.inc(f"dispatch.ata.{leaf_dispatch}")
+    # leaf accounting, identical across the three dispatches (the tree is a
+    # function of L only): 4^L diagonal syrk leaves, Σ_ℓ 2^{2ℓ-1}·7^{L-ℓ}
+    # off-diagonal Strassen leaves — what cost.dispatch_calls predicts.
+    obs.metrics.inc("ata.leaves.syrk", 4 ** L)
+    obs.metrics.inc(
+        "ata.leaves.strassen",
+        sum(2 ** (2 * lev - 1) * 7 ** (L - lev) for lev in range(1, L + 1)),
+    )
+    t0 = obs.dispatch_start(plan, a)
+    with obs.span(
+        "ata", m=a.shape[-2], n=n, levels=L, leaf_dispatch=leaf_dispatch
+    ):
+        ap = _pad_root(a, L) if L else a
+        if leaf_dispatch in ("batched", "fused"):
+            node = _ata_level_sync(
+                ap, L, variant=variant, base_syrk=base_syrk, base_dot=base_dot,
+                fused=leaf_dispatch == "fused",
+                fused_syrk=fused_syrk, fused_dot=fused_dot_kernel,
+            )
+        else:
+            strassen_rec = _rec_strassen if variant == "strassen" else _rec_winograd
+            node = _rec_ata(
+                [ap],
+                n_base=n_base,
+                base_syrk=base_syrk,
+                strassen_rec=strassen_rec,
+                base_dot=base_dot,
+                acc_dtype=acc_dtype,
+            )
 
-    if out == "packed":
-        result = _finalize_packed(node, n, packed_block)
+        if out == "packed":
+            result = _finalize_packed(node, n, packed_block)
+            if alpha != 1.0:
+                result = result.scale(alpha)
+            if c is not None:
+                if not isinstance(c, SymmetricMatrix):
+                    raise TypeError(
+                        "ata(..., out='packed') accumulates only into a "
+                        f"SymmetricMatrix c, got {type(c).__name__}"
+                    )
+                result = result.add(c.scale(beta) if beta != 1.0 else c)
+            return obs.dispatch_finish(plan, t0, result)
+
+        result = _finalize_dense(node, n)
         if alpha != 1.0:
-            result = result.scale(alpha)
+            result = alpha * result
         if c is not None:
-            if not isinstance(c, SymmetricMatrix):
-                raise TypeError(
-                    "ata(..., out='packed') accumulates only into a "
-                    f"SymmetricMatrix c, got {type(c).__name__}"
-                )
-            result = result.add(c.scale(beta) if beta != 1.0 else c)
-        return result
-
-    result = _finalize_dense(node, n)
-    if alpha != 1.0:
-        result = alpha * result
-    if c is not None:
-        if isinstance(c, SymmetricMatrix):
-            c = c.to_dense()
-        result = result + (beta * c if beta != 1.0 else c)
-    return result
+            if isinstance(c, SymmetricMatrix):
+                c = c.to_dense()
+            result = result + (beta * c if beta != 1.0 else c)
+        return obs.dispatch_finish(plan, t0, result)
 
 
 def ata(

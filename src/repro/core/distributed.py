@@ -57,6 +57,7 @@ import jax.numpy as jnp
 
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import obs
 from repro.compat import shard_map
 from repro.core.ata import ata
 from repro.core.strassen import strassen_tn
@@ -113,27 +114,30 @@ def gram_rowshard(
         raise ValueError(f"unknown output mode {out!r}; use 'dense' or 'packed'")
     if use_ata is None:
         use_ata = plan is None or plan.algorithm != "dense"
-    if use_ata:
-        local = ata(
-            a_local, plan=plan, n_base=n_base, variant=variant,
-            leaf_dispatch=leaf_dispatch, out=out, packed_block=packed_block,
-        )
-    else:
-        local = jax.lax.dot_general(
-            a_local, a_local, (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        if out == "packed":
-            if packed_block is None:
-                from repro.tune.defaults import DEFAULT_PACKED_BLOCK
+    obs.metrics.inc("dispatch.gram_rowshard")
+    with obs.span("distributed.gram_rowshard", out=out, use_ata=use_ata):
+        if use_ata:
+            local = ata(
+                a_local, plan=plan, n_base=n_base, variant=variant,
+                leaf_dispatch=leaf_dispatch, out=out, packed_block=packed_block,
+            )
+        else:
+            local = jax.lax.dot_general(
+                a_local, a_local, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            if out == "packed":
+                if packed_block is None:
+                    from repro.tune.defaults import DEFAULT_PACKED_BLOCK
 
-                packed_block = (
-                    plan.packed_block if plan is not None else DEFAULT_PACKED_BLOCK
-                )
-            local = SymmetricMatrix.from_dense(local, packed_block)
-    # psum maps over the SymmetricMatrix pytree leaf — the packed stack is
-    # the collective payload, never a mirrored square.
-    return jax.lax.psum(local, axis)
+                    packed_block = (
+                        plan.packed_block if plan is not None else DEFAULT_PACKED_BLOCK
+                    )
+                local = SymmetricMatrix.from_dense(local, packed_block)
+        # psum maps over the SymmetricMatrix pytree leaf — the packed stack
+        # is the collective payload, never a mirrored square.
+        with obs.span("distributed.psum", axis=axis, out=out):
+            return jax.lax.psum(local, axis)
 
 
 # ---------------------------------------------------------------------------
@@ -302,6 +306,9 @@ def ata_tile_parallel(
         jax.ShapeDtypeStruct((), jnp.int32),
     )
 
+    obs.metrics.inc("dispatch.ata_tile_parallel")
+    obs.metrics.inc("ata_tile_parallel.tiles", t_total)
+
     def local_fn(a_local):
         p = jax.lax.axis_index(task_axis)
 
@@ -328,10 +335,12 @@ def ata_tile_parallel(
         # python-unrolled tile loop (t_per is small): keeps every tile's
         # matmuls visible to XLA's cost model (lax.map would count the body
         # once) and lets XLA schedule tiles independently.
-        tiles = jnp.stack([tile_slot(q) for q in range(t_per)])
+        with obs.span("distributed.tile_body", t_per=t_per, w=w):
+            tiles = jnp.stack([tile_slot(q) for q in range(t_per)])
         if row_axis is not None:
             # packed retrieval: reduce the tile stack, not a dense (n, n)
-            tiles = jax.lax.psum(tiles, row_axis)
+            with obs.span("distributed.psum", axis=row_axis, out="packed"):
+                tiles = jax.lax.psum(tiles, row_axis)
         return tiles
 
     in_spec = P(row_axis, None) if row_axis else P(None, None)
@@ -461,19 +470,23 @@ def gemm_tn_colshard(
     # unpinned n_base/variant fall through to strassen_tn, which self-plans
     # on the per-device leaf shape (m, n, k/p) — every dispatch is planned.
 
+    obs.metrics.inc("dispatch.gemm_tn_colshard")
+
     def local_fn(a_local, b_local):
-        if use_strassen:
-            c_local = strassen_tn(
-                a_local, b_local, n_base=n_base, variant=variant,
-                leaf_dispatch=leaf_dispatch,
-            )
-        else:
-            c_local = jax.lax.dot_general(
-                a_local, b_local, (((0,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )
+        with obs.span("distributed.colshard_body", use_strassen=use_strassen):
+            if use_strassen:
+                c_local = strassen_tn(
+                    a_local, b_local, n_base=n_base, variant=variant,
+                    leaf_dispatch=leaf_dispatch,
+                )
+            else:
+                c_local = jax.lax.dot_general(
+                    a_local, b_local, (((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
         if row_axis is not None:
-            c_local = jax.lax.psum(c_local, row_axis)
+            with obs.span("distributed.psum", axis=row_axis, out="dense"):
+                c_local = jax.lax.psum(c_local, row_axis)
         return c_local
 
     row_spec = row_axis if row_axis else None

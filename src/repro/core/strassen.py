@@ -63,6 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.tune.defaults import DEFAULT_N_BASE  # re-export (tunables live there)
 
 __all__ = ["strassen_tn", "DEFAULT_N_BASE", "resolve_tunables"]
@@ -443,14 +444,17 @@ def _strassen_batched(a, b, L, base_dot, variant):
         return base_dot(a, b)
     enc, dec = _encode_fns(variant)
     A, B = _to_blocks(a, L)[None], _to_blocks(b, L)[None]
-    for _ in range(L):
-        A, B = enc(A, B)
+    for lev in range(1, L + 1):
+        with obs.span(f"strassen.encode.L{lev}"):
+            A, B = enc(A, B)
     # stacks are now (7^L, 1, 1, *batch, mb, nb): the block grid collapsed
     # into the leaf batch — squeeze it into the base dot's layout for free.
-    P = _leaf_dot(base_dot, A[:, 0, 0], B[:, 0, 0])
+    with obs.span("strassen.leaf_dot", leaves=A.shape[0]):
+        P = _leaf_dot(base_dot, A[:, 0, 0], B[:, 0, 0])
     P = P[:, None, None]
-    for _ in range(L):
-        P = dec(P)
+    for lev in range(L, 0, -1):
+        with obs.span(f"strassen.decode.L{lev}"):
+            P = dec(P)
     return _unblock(P)[0]
 
 
@@ -580,26 +584,29 @@ def _strassen_fused(a, b, L, base_dot, fused_dot=None):
     if L == 0:
         return base_dot(a, b)
     (ar, ac, asg), (br, bc, bsg) = _slot_tables(L)
-    if fused_dot is not None:
-        # the Pallas fused launch: gather+combine happens in the kernel
-        # prologue against the block-major layout (one leading group here)
-        P = fused_dot(_to_blocks(a, L)[None], _to_blocks(b, L)[None],
-                      _slot_tables(L))
-    else:
-        # XLA fallback: per-leaf combine + per-leaf dot. Stacking the
-        # combined operands for one batched dot would just rebuild the
-        # operand stack the fused dispatch exists to avoid (and XLA:CPU
-        # runs a leading batch dim slower than the same dots unbatched);
-        # only the product stack — the decode input — is materialized.
-        ga, gb = _block_getter(a, L), _block_getter(b, L)
-        P = jnp.stack([
-            base_dot(_combine_slots(ga, ar[s], ac[s], asg[s]),
-                     _combine_slots(gb, br[s], bc[s], bsg[s]))
-            for s in range(7 ** L)
-        ])
+    with obs.span("strassen.fused_leaves", leaves=7 ** L,
+                  kernel=fused_dot is not None):
+        if fused_dot is not None:
+            # the Pallas fused launch: gather+combine happens in the kernel
+            # prologue against the block-major layout (one leading group here)
+            P = fused_dot(_to_blocks(a, L)[None], _to_blocks(b, L)[None],
+                          _slot_tables(L))
+        else:
+            # XLA fallback: per-leaf combine + per-leaf dot. Stacking the
+            # combined operands for one batched dot would just rebuild the
+            # operand stack the fused dispatch exists to avoid (and XLA:CPU
+            # runs a leading batch dim slower than the same dots unbatched);
+            # only the product stack — the decode input — is materialized.
+            ga, gb = _block_getter(a, L), _block_getter(b, L)
+            P = jnp.stack([
+                base_dot(_combine_slots(ga, ar[s], ac[s], asg[s]),
+                         _combine_slots(gb, br[s], bc[s], bsg[s]))
+                for s in range(7 ** L)
+            ])
     P = P[:, None, None]
-    for _ in range(L):
-        P = _decode_strassen(P)
+    for lev in range(L, 0, -1):
+        with obs.span(f"strassen.decode.L{lev}"):
+            P = _decode_strassen(P)
     return _unblock(P)[0]
 
 
@@ -681,21 +688,27 @@ def strassen_tn(
     m, n = a.shape[-2:]
     k = b.shape[-1]
     L = tree_depth((m, n, k), n_base)
-    if L:
-        # satellite of the batched-leaf PR: ONE root pad to 2^L multiples
-        # (and one crop below) replaces the per-level _pad_even of the seed.
-        a = _pad_root(a, L)
-        b = _pad_root(b, L)
-    if leaf_dispatch == "batched":
-        out = _strassen_batched(a, b, L, base_dot, variant)
-    elif leaf_dispatch == "fused":
-        out = _strassen_fused(a, b, L, base_dot, fused_dot)
-    else:
-        rec = _rec_strassen if variant == "strassen" else _rec_winograd
-        out = rec(a, b, n_base=n_base, base_dot=base_dot, acc_dtype=acc_dtype)
-    out = out[..., :n, :k]
-    if alpha != 1.0:
-        out = alpha * out
-    if c is not None:
-        out = out + (beta * c if beta != 1.0 else c)
-    return out
+    obs.metrics.inc(f"dispatch.gemm_tn.{leaf_dispatch}")
+    obs.metrics.inc("gemm_tn.leaves", 7 ** L)
+    t0 = obs.dispatch_start(plan, a)
+    with obs.span(
+        "strassen_tn", m=m, n=n, k=k, levels=L, leaf_dispatch=leaf_dispatch
+    ):
+        if L:
+            # satellite of the batched-leaf PR: ONE root pad to 2^L multiples
+            # (and one crop below) replaces the per-level _pad_even of the seed.
+            a = _pad_root(a, L)
+            b = _pad_root(b, L)
+        if leaf_dispatch == "batched":
+            out = _strassen_batched(a, b, L, base_dot, variant)
+        elif leaf_dispatch == "fused":
+            out = _strassen_fused(a, b, L, base_dot, fused_dot)
+        else:
+            rec = _rec_strassen if variant == "strassen" else _rec_winograd
+            out = rec(a, b, n_base=n_base, base_dot=base_dot, acc_dtype=acc_dtype)
+        out = out[..., :n, :k]
+        if alpha != 1.0:
+            out = alpha * out
+        if c is not None:
+            out = out + (beta * c if beta != 1.0 else c)
+        return obs.dispatch_finish(plan, t0, out)

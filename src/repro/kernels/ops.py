@@ -16,6 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels.gemm_tn import DEFAULT_BLOCKS as GEMM_BLOCKS
 from repro.kernels.gemm_tn import gemm_tn_fused_pallas, gemm_tn_pallas
 from repro.kernels.potrf import potrf_pallas
@@ -64,14 +65,16 @@ def syrk(
         interpret = interpret_default()
     if blocks is None and plan is not None:
         blocks = plan.syrk_blocks
-    return syrk_pallas(
-        a,
-        alpha=alpha,
-        blocks=tuple(blocks or SYRK_BLOCKS),
-        interpret=interpret,
-        out_dtype=out_dtype,
-        out=out,
-    )
+    obs.metrics.inc("kernels.launch.syrk")
+    with obs.span("kernels.syrk", interpret=interpret):
+        return syrk_pallas(
+            a,
+            alpha=alpha,
+            blocks=tuple(blocks or SYRK_BLOCKS),
+            interpret=interpret,
+            out_dtype=out_dtype,
+            out=out,
+        )
 
 
 def gemm_tn(
@@ -97,14 +100,16 @@ def gemm_tn(
         interpret = interpret_default()
     if blocks is None and plan is not None:
         blocks = plan.gemm_blocks
-    return gemm_tn_pallas(
-        a,
-        b,
-        alpha=alpha,
-        blocks=tuple(blocks or GEMM_BLOCKS),
-        interpret=interpret,
-        out_dtype=out_dtype,
-    )
+    obs.metrics.inc("kernels.launch.gemm_tn")
+    with obs.span("kernels.gemm_tn", interpret=interpret):
+        return gemm_tn_pallas(
+            a,
+            b,
+            alpha=alpha,
+            blocks=tuple(blocks or GEMM_BLOCKS),
+            interpret=interpret,
+            out_dtype=out_dtype,
+        )
 
 
 def gemm_tn_fused(
@@ -133,15 +138,17 @@ def gemm_tn_fused(
         interpret = interpret_default()
     if blocks is None and plan is not None:
         blocks = plan.gemm_blocks
-    return gemm_tn_fused_pallas(
-        a_blocks,
-        b_blocks,
-        tables,
-        alpha=alpha,
-        blocks=tuple(blocks or GEMM_BLOCKS),
-        interpret=interpret,
-        out_dtype=out_dtype,
-    )
+    obs.metrics.inc("kernels.launch.gemm_tn_fused")
+    with obs.span("kernels.gemm_tn_fused", interpret=interpret):
+        return gemm_tn_fused_pallas(
+            a_blocks,
+            b_blocks,
+            tables,
+            alpha=alpha,
+            blocks=tuple(blocks or GEMM_BLOCKS),
+            interpret=interpret,
+            out_dtype=out_dtype,
+        )
 
 
 def syrk_gather(
@@ -168,15 +175,17 @@ def syrk_gather(
         interpret = interpret_default()
     if blocks is None and plan is not None:
         blocks = plan.syrk_blocks
-    return syrk_gather_pallas(
-        a_blocks,
-        rows,
-        cols,
-        alpha=alpha,
-        blocks=tuple(blocks or SYRK_BLOCKS),
-        interpret=interpret,
-        out_dtype=out_dtype,
-    )
+    obs.metrics.inc("kernels.launch.syrk_gather")
+    with obs.span("kernels.syrk_gather", interpret=interpret):
+        return syrk_gather_pallas(
+            a_blocks,
+            rows,
+            cols,
+            alpha=alpha,
+            blocks=tuple(blocks or SYRK_BLOCKS),
+            interpret=interpret,
+            out_dtype=out_dtype,
+        )
 
 
 def potrf(a, *, interpret=None, out_dtype=jnp.float32):
@@ -190,7 +199,9 @@ def potrf(a, *, interpret=None, out_dtype=jnp.float32):
     """
     if interpret is None:
         interpret = interpret_default()
-    return potrf_pallas(a, interpret=interpret, out_dtype=out_dtype)
+    obs.metrics.inc("kernels.launch.potrf")
+    with obs.span("kernels.potrf", interpret=interpret):
+        return potrf_pallas(a, interpret=interpret, out_dtype=out_dtype)
 
 
 def trsm(l, b, *, transpose=True, interpret=None, out_dtype=jnp.float32):
@@ -204,5 +215,7 @@ def trsm(l, b, *, transpose=True, interpret=None, out_dtype=jnp.float32):
     """
     if interpret is None:
         interpret = interpret_default()
-    return trsm_pallas(l, b, transpose=transpose, interpret=interpret,
-                       out_dtype=out_dtype)
+    obs.metrics.inc("kernels.launch.trsm")
+    with obs.span("kernels.trsm", interpret=interpret):
+        return trsm_pallas(l, b, transpose=transpose, interpret=interpret,
+                           out_dtype=out_dtype)

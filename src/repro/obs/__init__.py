@@ -1,0 +1,96 @@
+"""``repro.obs`` — zero-dependency observability for the ATA stack.
+
+Three small modules, one switch:
+
+* :mod:`repro.obs.trace` — nestable **spans** naming recursion levels,
+  batched/fused leaf launches, kernel wrappers, the solve front door and
+  the SPMD schedule bodies. Disabled (the default) they are strict no-ops
+  — instrumented paths stay bitwise- and jaxpr-identical (tested); enabled
+  they record events and wrap regions in ``jax.named_scope`` +
+  ``jax.profiler.TraceAnnotation`` so profiler timelines carry the same
+  names.
+* :mod:`repro.obs.metrics` — always-on process-local counters / gauges /
+  histograms (plan-cache hits/misses/migrations, autotune trials and win
+  margins, leaf counts per dispatch, kernel launches, collective bytes,
+  solve iterations) with a validated JSON snapshot
+  (``metrics.export_json`` → ``BENCH_obs.json``).
+* :mod:`repro.obs.calibrate` — every planned *eager* dispatch records
+  ``(plan, predicted_seconds, measured_seconds)``; ``calibrate.report()``
+  renders the predicted-vs-measured drift table per Machine profile,
+  closing the loop on ``tune.cost.predict_seconds``.
+
+Quickstart (DESIGN.md §8):
+
+    from repro import obs
+    obs.enable()
+    c = ata(a, out="packed")            # spans + dispatch counters
+    x = solve.lstsq(a, b)               # + one calibration row
+    snap = obs.metrics.snapshot()       # JSON-ready; obs.report() for text
+
+Smoke entry point: ``python -m repro.obs`` runs one planned
+``plan → ata → solve.lstsq`` with tracing on, validates the snapshot, and
+writes ``BENCH_obs.json`` — the CI obs-smoke step.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.obs import calibrate, metrics, trace
+from repro.obs.trace import disable, enable, enabled, span
+
+__all__ = [
+    "trace",
+    "metrics",
+    "calibrate",
+    "enable",
+    "disable",
+    "enabled",
+    "span",
+    "report",
+    "dispatch_start",
+    "dispatch_finish",
+]
+
+
+def report() -> str:
+    """The calibration drift table (text) — see ``calibrate.report``."""
+    return calibrate.report()
+
+
+# ---------------------------------------------------------------------------
+# dispatch-site calibration helpers (used by core.ata / core.strassen /
+# solve.lstsq — the three planned front doors)
+# ---------------------------------------------------------------------------
+
+
+def dispatch_start(plan, operand):
+    """Start a calibration measurement for one planned dispatch, or return
+    ``None`` when there is nothing meaningful to measure:
+
+    * obs disabled (the common case — this is the one-branch fast path);
+    * no plan / no ``predicted_s`` on it (hand-pinned dispatches);
+    * ``operand`` is a tracer — inside ``jit``/``shard_map`` the wrapped
+      region runs at *trace* time, where wall clock means compile time.
+    """
+    if not trace.enabled():
+        return None
+    if plan is None or getattr(plan, "predicted_s", None) is None:
+        return None
+    import jax
+
+    if isinstance(operand, jax.core.Tracer):
+        return None
+    return time.perf_counter()
+
+
+def dispatch_finish(plan, t0, result):
+    """Close a measurement opened by :func:`dispatch_start`: block on the
+    result (pytree-aware), record the pair, hand the result back."""
+    if t0 is None:
+        return result
+    import jax
+
+    result = jax.block_until_ready(result)
+    calibrate.record(plan, time.perf_counter() - t0)
+    return result

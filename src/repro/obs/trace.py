@@ -1,0 +1,147 @@
+"""Nestable span API — the tracing half of ``repro.obs``.
+
+A *span* names one region of the dispatch pipeline: a recursion level, a
+batched/fused leaf launch, a kernel wrapper, the solve front door, an SPMD
+schedule body. Spans are threaded through the stack unconditionally, but
+
+* **disabled (the default)** — :func:`span` returns one shared no-op
+  context manager. No jax import, no allocation beyond the call itself, no
+  effect on the traced program: instrumented paths stay bitwise- and
+  jaxpr-identical to their uninstrumented form (regression-tested in
+  ``tests/test_obs.py``).
+* **enabled** (:func:`enable` / ``REPRO_OBS=1``) — each span records an
+  event into a bounded in-process buffer (name, depth, attrs) and wraps
+  the region in ``jax.named_scope`` (so op names in lowered HLO carry the
+  span path — metadata only, never an op) plus
+  ``jax.profiler.TraceAnnotation`` (so host trace timelines from
+  ``jax.profiler.trace`` show the same region names).
+
+Spans deliberately do **not** time traced code: inside ``jit`` they open
+and close at trace time, where wall clock means compile time. Wall-clock
+measurement lives at the eager dispatch sites (``repro.obs.calibrate``)
+and in the profiler traces the annotations label.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from collections import Counter
+
+__all__ = [
+    "enable",
+    "disable",
+    "enabled",
+    "span",
+    "span_counts",
+    "span_events",
+    "reset",
+    "MAX_EVENTS",
+]
+
+_ENABLED = os.environ.get("REPRO_OBS", "") == "1"
+_LOCK = threading.Lock()
+_COUNTS: Counter = Counter()          # span name -> times entered
+_EVENTS: list = []                    # ordered (name, depth, attrs), bounded
+_DEPTH = threading.local()
+
+# events beyond this are counted but not stored — an unrolled 7^L recursion
+# must never grow host memory unboundedly just because tracing is on.
+MAX_EVENTS = 10_000
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+def enable() -> None:
+    """Turn span recording on (and named_scope/TraceAnnotation wrapping)."""
+    global _ENABLED
+    _ENABLED = True
+
+
+def disable() -> None:
+    global _ENABLED
+    _ENABLED = False
+
+
+def reset() -> None:
+    """Drop recorded spans (tests; between benchmark modules)."""
+    with _LOCK:
+        _COUNTS.clear()
+        _EVENTS.clear()
+
+
+def span_counts() -> dict:
+    """{span name: times entered} since the last :func:`reset`."""
+    with _LOCK:
+        return dict(_COUNTS)
+
+
+def span_events() -> list:
+    """Ordered recorded events ``(name, depth, attrs)`` (bounded by
+    ``MAX_EVENTS``; counts in :func:`span_counts` are always complete)."""
+    with _LOCK:
+        return list(_EVENTS)
+
+
+class _NullSpan:
+    """The shared disabled-mode span: enters and exits with no effect."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL = _NullSpan()
+
+
+class _Span:
+    __slots__ = ("name", "attrs", "_scope", "_annotation")
+
+    def __init__(self, name: str, attrs: dict):
+        self.name = name
+        self.attrs = attrs
+
+    def __enter__(self):
+        depth = getattr(_DEPTH, "v", 0)
+        _DEPTH.v = depth + 1
+        with _LOCK:
+            _COUNTS[self.name] += 1
+            if len(_EVENTS) < MAX_EVENTS:
+                _EVENTS.append((self.name, depth, self.attrs))
+        import jax
+
+        self._scope = jax.named_scope(self.name)
+        self._scope.__enter__()
+        try:
+            self._annotation = jax.profiler.TraceAnnotation(self.name)
+            self._annotation.__enter__()
+        except Exception:
+            # host profiler unavailable (stripped containers): the span
+            # still records + names scopes; annotation becomes a no-op.
+            self._annotation = None
+        return self
+
+    def __exit__(self, *exc):
+        if self._annotation is not None:
+            self._annotation.__exit__(*exc)
+        self._scope.__exit__(*exc)
+        _DEPTH.v = getattr(_DEPTH, "v", 1) - 1
+        return False
+
+
+def span(name: str, **attrs):
+    """Context manager naming one region of the dispatch pipeline.
+
+    ``name`` is a dotted path (``"ata.encode.L2"``, ``"kernels.syrk"``);
+    keyword attrs ride along into the event buffer (small static values
+    only — shapes, leaf counts, dispatch kinds; never arrays).
+    """
+    if not _ENABLED:
+        return _NULL
+    return _Span(name, attrs)

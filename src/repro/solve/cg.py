@@ -29,6 +29,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 __all__ = ["cg_gram", "cg_lstsq"]
 
 
@@ -125,11 +127,17 @@ def cg_lstsq(
         )
         kw["variant"] = plan.variant
 
+    obs.metrics.inc("solve.cg.calls")
+    # the fixed trip count IS the iteration budget (columns converge by
+    # freezing inside the loop, not by exiting it)
+    obs.metrics.set_gauge("solve.cg.iters", iters)
+
     def matvec(p):
         ap = a @ p                         # (m, r): plain NN dot
         atap = strassen_tn(a, ap, **kw)    # Aᵀ(A·p): planned TN product
         return atap + ridge * p if ridge else atap
 
-    rhs = strassen_tn(a, b2, **kw)         # Aᵀb — same planned TN dispatch
-    x = cg_gram(matvec, rhs, iters=iters, tol=tol)
+    with obs.span("solve.cg", iters=iters, m=m, n=n):
+        rhs = strassen_tn(a, b2, **kw)     # Aᵀb — same planned TN dispatch
+        x = cg_gram(matvec, rhs, iters=iters, tol=tol)
     return x[:, 0] if vector else x

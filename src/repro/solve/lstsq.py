@@ -31,6 +31,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.solve.cg import cg_lstsq
 from repro.solve.cholesky import cholesky
 from repro.solve.triangular import solve_cholesky
@@ -99,11 +100,16 @@ def lstsq(
             n_base=_defaults.DEFAULT_N_BASE, variant=_defaults.DEFAULT_VARIANT
         )
 
+    obs.metrics.inc(f"dispatch.solve.{method}")
+    t0 = obs.dispatch_start(plan, a)
     if method == "cg":
-        if pinned:
-            return cg_lstsq(a, b, ridge=ridge, iters=iters, tol=tol,
-                            **static_kw)
-        return cg_lstsq(a, b, ridge=ridge, iters=iters, tol=tol, plan=plan)
+        with obs.span("solve.lstsq", method="cg", m=m, n=n, r=r):
+            if pinned:
+                x = cg_lstsq(a, b, ridge=ridge, iters=iters, tol=tol,
+                             **static_kw)
+            else:
+                x = cg_lstsq(a, b, ridge=ridge, iters=iters, tol=tol, plan=plan)
+            return obs.dispatch_finish(plan, t0, x)
 
     # --- factor path: planned packed gram → packed Cholesky → substitutions
     from repro.core.ata import ata
@@ -114,19 +120,27 @@ def lstsq(
     if plan is not None:
         if packed_block is None:
             packed_block = plan.packed_block
+        # predicted_s=None: the solve-level prediction prices the whole
+        # pipeline, not the inner gram — carrying it over would record a
+        # mislabeled op='ata' calibration row at the inner dispatch.
         ata_plan = dataclasses.replace(
-            plan, op="ata", k=n, out="packed", method=None
+            plan, op="ata", k=n, out="packed", method=None, predicted_s=None
         )
     else:
         ata_kw = static_kw
-    a32 = a.astype(jnp.float32)
-    gram = ata(a32, plan=ata_plan, out="packed", packed_block=packed_block,
-               **ata_kw)
-    if ridge:
-        gram = gram.add_scaled_identity(ridge)
-    vector = b.ndim == 1
-    b2 = (b[:, None] if vector else b).astype(jnp.float32)
-    rhs = _dot_tn(a32, b2, jnp.float32)              # Aᵀb, Aᵀ never formed
-    factor = cholesky(gram, plan=plan)
-    x = solve_cholesky(factor, rhs, plan=plan)
-    return x[..., 0] if vector else x
+    with obs.span("solve.lstsq", method="factor", m=m, n=n, r=r):
+        a32 = a.astype(jnp.float32)
+        with obs.span("solve.gram"):
+            gram = ata(a32, plan=ata_plan, out="packed",
+                       packed_block=packed_block, **ata_kw)
+        if ridge:
+            gram = gram.add_scaled_identity(ridge)
+        vector = b.ndim == 1
+        b2 = (b[:, None] if vector else b).astype(jnp.float32)
+        rhs = _dot_tn(a32, b2, jnp.float32)          # Aᵀb, Aᵀ never formed
+        with obs.span("solve.cholesky"):
+            factor = cholesky(gram, plan=plan)
+        with obs.span("solve.substitution"):
+            x = solve_cholesky(factor, rhs, plan=plan)
+        x = x[..., 0] if vector else x
+        return obs.dispatch_finish(plan, t0, x)

@@ -26,12 +26,14 @@ Cache location: ``$REPRO_TUNE_CACHE`` if set, else
 from __future__ import annotations
 
 import json
+import logging
 import os
 import threading
 from typing import Optional
 
 import jax
 
+from repro.obs import metrics
 from repro.tune import cost, defaults
 
 __all__ = [
@@ -41,7 +43,35 @@ __all__ = [
     "load_cache",
     "save_cache",
     "clear_memo",
+    "cache_stats",
 ]
+
+_LOG = logging.getLogger("repro.tune.cache")
+
+# metric names of the plan-cache counters (repro.obs.metrics registry) —
+# hit/miss count *front-door resolutions* (plan() calls), the load-side
+# counters count per-load events (load_cache runs on every non-memo
+# resolution, so a migrated entry is counted once per load, not once ever).
+_STAT_NAMES = (
+    "memo_hit",        # resolved from the in-process memo
+    "hit",             # resolved from the persistent JSON cache
+    "miss",            # fell through to the analytic model
+    "autotuned",       # resolved by a measured autotune run (persisted)
+    "migrated",        # old-schema keys migrated on load
+    "sanitized",       # unknown-leaf_dispatch entries sanitized on load
+    "skipped_entries", # corrupt/undeserializable entries skipped on load
+    "load_failure",    # unreadable/corrupt cache file tolerated
+)
+
+
+def cache_stats() -> dict:
+    """Current plan-cache counters, ``{short_name: count}``.
+
+    The counters live in the ``repro.obs.metrics`` registry under
+    ``tune.cache.<name>`` (always on — see the registry's module
+    docstring); this accessor is the stable public view of them.
+    """
+    return {name: metrics.get(f"tune.cache.{name}") for name in _STAT_NAMES}
 
 _MEMO: dict = {}
 _LOCK = threading.Lock()
@@ -95,15 +125,28 @@ def load_cache(path: Optional[str] = None) -> dict:
     try:
         with open(path) as f:
             raw = json.load(f)
-    except (OSError, json.JSONDecodeError):
+    except FileNotFoundError:
+        # no cache yet is the normal first-run state, not a failure
+        return {}
+    except (OSError, json.JSONDecodeError) as e:
+        # a present-but-unreadable file is tolerated (the analytic model
+        # covers every key) but no longer silent: one line names the path
+        # and the reason so a corrupt cache stops masquerading as a miss.
+        metrics.inc("tune.cache.load_failure")
+        _LOG.warning(
+            "plan cache %s unreadable (%s: %s); continuing with empty cache",
+            path, type(e).__name__, e,
+        )
         return {}
     out = {}
+    skipped = 0
     for key, d in raw.get("plans", {}).items():
         for old in _COMPAT_SCHEMAS:
             # older-schema keys whose layout is otherwise unchanged are
             # migrated in place, so pre-bump measured plans keep serving
             if key.startswith(old + "|"):
                 key = _SCHEMA + key[len(old):]
+                metrics.inc("tune.cache.migrated")
                 break
         try:
             p = cost.Plan.from_json(d)
@@ -112,6 +155,7 @@ def load_cache(path: Optional[str] = None) -> dict:
             # (KeyError on a missing field, ValueError on a non-dict value):
             # skip the entry; the analytic model covers the key instead of
             # one bad line crashing every planned dispatch in the process.
+            skipped += 1
             continue
         if p.leaf_dispatch not in _KNOWN_LEAF_DISPATCHES:
             # a future schema's dispatch value: fall back to the always-
@@ -120,7 +164,14 @@ def load_cache(path: Optional[str] = None) -> dict:
             import dataclasses
 
             p = dataclasses.replace(p, leaf_dispatch="unrolled")
+            metrics.inc("tune.cache.sanitized")
         out[key] = p
+    if skipped:
+        metrics.inc("tune.cache.skipped_entries", skipped)
+        _LOG.warning(
+            "plan cache %s: skipped %d undeserializable entr%s",
+            path, skipped, "y" if skipped == 1 else "ies",
+        )
     return out
 
 
@@ -197,6 +248,7 @@ def plan(
     with _LOCK:
         hit = _MEMO.get(memo_key)
     if hit is not None:
+        metrics.inc("tune.cache.memo_hit")
         return hit
 
     measured_now = False
@@ -204,10 +256,12 @@ def plan(
     if persisted is not None and (persisted.source == "measured" or not autotune):
         import dataclasses
 
+        metrics.inc("tune.cache.hit")
         resolved = dataclasses.replace(persisted, source="cache")
     elif autotune and devices == 1:
         from repro.tune import search
 
+        metrics.inc("tune.cache.autotuned")
         resolved = search.autotune(
             op, m, n, k, batch=batch, dtype=dtype, out=out,
             backend=backend, devices=devices,
@@ -220,6 +274,7 @@ def plan(
         # devices > 1 with autotune lands here too: the autotuner's timed
         # callable is the single-device op, which says nothing about the
         # distributed tile schedule — distributed plans stay analytic.
+        metrics.inc("tune.cache.miss")
         resolved = cost.analytic_plan(
             op, m, n, k, batch=batch, dtype=dtype, out=out,
             backend=backend, devices=devices,

@@ -23,6 +23,7 @@ from typing import Optional
 import jax
 import numpy as np
 
+from repro.obs import calibrate, metrics
 from repro.tune import cost
 
 __all__ = ["time_fn", "time_pair", "measure_plan", "autotune"]
@@ -159,11 +160,14 @@ def autotune(
         if not _same_dispatch(c, base)
     ]
 
+    metrics.inc("tune.autotune.runs")
     base_fn = build_callable(base)
     args = _operands(base)
     t_base = time_fn(base_fn, *args, iters=iters, warmup=warmup)
+    calibrate.record(base, t_base, source="autotune")
     best = (1.0, base, t_base, t_base)
     for cand in cands:
+        metrics.inc("tune.autotune.trials")
         cand_fn = build_callable(cand)
         ratio, tb, tc = time_ratio(
             base_fn, cand_fn, *args, iters=iters, warmup=warmup
@@ -176,10 +180,18 @@ def autotune(
             r2, tb2, tc2 = time_ratio(base_fn, cand_fn, *args, iters=iters, warmup=0)
             ratio = min(ratio, r2)
             tb, tc = min(tb, tb2), min(tc, tc2)
+        # every trial's clean-machine floor is a calibration pair for the
+        # candidate's analytic prediction (candidates() stamps predicted_s)
+        calibrate.record(cand, tc, source="autotune")
         # ratio > 1: candidate beats the default, burst-noise-robustly
         if ratio > 1.0 + margin and ratio > best[0]:
             best = (ratio, cand, tc, tb)
-    _, plan, t, t_baseline = best
+    ratio_won, plan, t, t_baseline = best
+    if plan is base:
+        metrics.inc("tune.autotune.kept_default")
+    else:
+        metrics.inc("tune.autotune.wins")
+        metrics.observe("tune.autotune.win_margin", ratio_won - 1.0)
     return dataclasses.replace(
         plan, source="measured", measured_s=t, baseline_s=t_baseline
     )

@@ -1,0 +1,377 @@
+"""Tests for the ``repro.obs`` observability subsystem (DESIGN.md §8).
+
+The load-bearing guarantee: with obs **disabled** (the default) the
+instrumented dispatch paths are strict no-ops — same jaxpr, bitwise-same
+values — and even **enabled**, spans never add an op to the traced program
+(``jax.named_scope`` is metadata-only). Plus the registry/calibration
+contracts and the `analysis.hlo.collective_bytes` edge cases the metrics
+wiring depends on.
+"""
+
+import json
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.analysis.hlo import collective_bytes
+from repro.core.ata import ata
+from repro.core.strassen import strassen_tn
+from repro.obs import calibrate, metrics, trace
+from repro.tune import cache as tune_cache
+from repro.tune import cost
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts disabled with empty registries and leaves no state."""
+    was_enabled = trace.enabled()
+    trace.disable()
+    trace.reset()
+    metrics.reset()
+    calibrate.reset()
+    yield
+    trace.enable() if was_enabled else trace.disable()
+    trace.reset()
+    metrics.reset()
+    calibrate.reset()
+
+
+def _rng(shape, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal(shape), jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# spans: disabled = strict no-op; enabled = zero jaxpr ops
+# ---------------------------------------------------------------------------
+
+
+def test_span_disabled_is_shared_noop():
+    s1 = obs.span("anything", attr=1)
+    s2 = obs.span("else")
+    assert s1 is s2  # one shared null object — no per-call allocation
+    with s1:
+        pass
+    assert trace.span_counts() == {}
+
+
+def test_spans_add_zero_ops_to_jaxpr():
+    a = _rng((96, 64))
+
+    # two distinct function objects: jax caches traces per (fun, args), so
+    # reusing one would hand back the first trace without re-entering ata
+    def f_off(x):
+        return ata(x, n_base=16, variant="strassen", leaf_dispatch="batched")
+
+    def f_on(x):
+        return ata(x, n_base=16, variant="strassen", leaf_dispatch="batched")
+
+    jaxpr_off = jax.make_jaxpr(f_off)(a)
+    trace.enable()
+    try:
+        jaxpr_on = jax.make_jaxpr(f_on)(a)
+        assert trace.span_counts()  # spans really fired during tracing
+    finally:
+        trace.disable()
+    assert len(jaxpr_off.eqns) == len(jaxpr_on.eqns)
+    assert str(jaxpr_off) == str(jaxpr_on)
+
+
+def test_enabled_results_bitwise_identical():
+    a = _rng((80, 48))
+    b = _rng((80, 32), seed=1)
+    off_ata = ata(a, n_base=16, variant="strassen")
+    off_tn = strassen_tn(a, b, n_base=16, variant="strassen")
+    trace.enable()
+    try:
+        on_ata = ata(a, n_base=16, variant="strassen")
+        on_tn = strassen_tn(a, b, n_base=16, variant="strassen")
+    finally:
+        trace.disable()
+    np.testing.assert_array_equal(np.asarray(off_ata), np.asarray(on_ata))
+    np.testing.assert_array_equal(np.asarray(off_tn), np.asarray(on_tn))
+
+
+def test_span_nesting_depth_and_events():
+    trace.enable()
+    try:
+        with obs.span("outer", k=1):
+            with obs.span("inner"):
+                pass
+        with obs.span("outer"):
+            pass
+    finally:
+        trace.disable()
+    assert trace.span_counts() == {"outer": 2, "inner": 1}
+    events = trace.span_events()
+    assert ("outer", 0, {"k": 1}) in events
+    assert ("inner", 1, {}) in events
+
+
+def test_level_spans_cover_every_recursion_level():
+    a = _rng((128, 128))
+    trace.enable()
+    try:
+        ata(a, n_base=32, variant="strassen", leaf_dispatch="batched")
+    finally:
+        trace.disable()
+    spans = trace.span_counts()
+    L = 2  # 128 / 2^2 = 32 = n_base
+    for lev in range(1, L + 1):
+        assert f"ata.encode.L{lev}" in spans
+        assert f"ata.decode.L{lev}" in spans
+    assert "ata.leaf_dot" in spans and "ata.syrk_batch" in spans
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_registry_roundtrip(tmp_path):
+    metrics.inc("x.count")
+    metrics.inc("x.count", 4)
+    metrics.set_gauge("x.gauge", 2.5)
+    for v in (1.0, 3.0, 2.0):
+        metrics.observe("x.hist", v)
+    assert metrics.get("x.count") == 5
+    assert metrics.counters("x.") == {"x.count": 5}
+    assert metrics.gauges()["x.gauge"] == 2.5
+    h = metrics.histograms()["x.hist"]
+    assert (h["count"], h["sum"], h["min"], h["max"]) == (3, 6.0, 1.0, 3.0)
+
+    snap = metrics.validate_snapshot(metrics.snapshot())
+    out = metrics.export_json(str(tmp_path / "obs.json"))
+    with open(out) as f:
+        disk = json.load(f)
+    assert disk["schema"] == metrics.SNAPSHOT_SCHEMA
+    assert disk["counters"] == snap["counters"]
+
+
+def test_validate_snapshot_rejects_bad_schema():
+    snap = metrics.snapshot()
+    snap["schema"] = "bogus"
+    with pytest.raises(ValueError, match="schema"):
+        metrics.validate_snapshot(snap)
+    with pytest.raises(ValueError, match="meta"):
+        metrics.validate_snapshot({"schema": metrics.SNAPSHOT_SCHEMA})
+
+
+def test_record_collective_bytes_folds_into_registry():
+    hlo = "%ar = f32[16,16]{1,0} all-reduce(f32[16,16]{1,0} %p0)"
+    by_kind = metrics.record_collective_bytes(hlo)
+    assert by_kind == {"all-reduce": 16 * 16 * 4}
+    assert metrics.get("collective_bytes.all-reduce") == 16 * 16 * 4
+
+
+def test_dispatch_counters_always_on():
+    a = _rng((64, 48))
+    ata(a, n_base=16, variant="strassen", leaf_dispatch="unrolled")
+    assert metrics.get("dispatch.ata.unrolled") == 1
+    assert metrics.get("ata.leaves.syrk") > 0
+    b = _rng((64, 24), seed=2)
+    strassen_tn(a, b, n_base=16, variant="strassen", leaf_dispatch="batched")
+    assert metrics.get("dispatch.gemm_tn.batched") == 1
+    assert metrics.get("gemm_tn.leaves") >= 7
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+
+def _plan(predicted=1e-3, **kw):
+    base = cost.default_plan("ata", 256, 128, backend="cpu")
+    import dataclasses
+
+    return dataclasses.replace(base, predicted_s=predicted, **kw)
+
+
+def test_calibrate_records_against_prediction():
+    calibrate.record(_plan(), 2e-3)
+    calibrate.record(_plan(predicted=None), 5.0)   # no prediction: skipped
+    calibrate.record(_plan(), -1.0)                # non-positive: skipped
+    rows = calibrate.rows()
+    assert len(rows) == 1
+    table = calibrate.drift_table()
+    assert table[0]["ratio"] == pytest.approx(2.0)
+    assert "geomean measured/predicted" in calibrate.report()
+
+
+def test_calibrate_drift_aggregates_per_key():
+    for meas in (2e-3, 8e-3):
+        calibrate.record(_plan(), meas)
+    (g,) = calibrate.drift_table(backend="cpu")
+    assert g["n"] == 2
+    assert g["measured_s"] == pytest.approx(2e-3)   # min over rows
+    assert g["ratio"] == pytest.approx(4.0)         # geomean of 2 and 8
+
+
+def test_eager_planned_dispatch_records_calibration_row():
+    import dataclasses
+
+    a = _rng((192, 96))
+    plan = dataclasses.replace(
+        cost.analytic_plan(
+            "ata", 192, 96, dtype="float32", backend=jax.default_backend()
+        ),
+        algorithm="strassen", n_base=32, leaf_dispatch="batched",
+    )
+    assert plan.predicted_s is not None
+    trace.enable()
+    try:
+        ata(a, plan=plan)
+    finally:
+        trace.disable()
+    rows = calibrate.rows()
+    assert len(rows) == 1 and rows[0]["op"] == "ata"
+    assert rows[0]["measured_s"] > 0
+
+
+def test_no_calibration_under_jit_tracing():
+    import dataclasses
+
+    a = _rng((96, 64))
+    plan = dataclasses.replace(
+        cost.analytic_plan(
+            "ata", 96, 64, dtype="float32", backend=jax.default_backend()
+        ),
+        algorithm="strassen", n_base=32,
+    )
+    trace.enable()
+    try:
+        jax.jit(lambda x: ata(x, plan=plan))(a)
+    finally:
+        trace.disable()
+    # inside jit the region runs at trace time — wall clock there would be
+    # compile time, so the dispatch site must not record
+    assert calibrate.rows() == []
+
+
+# ---------------------------------------------------------------------------
+# plan-cache counters (tune.cache satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_cache_stats_miss_then_memo_hit(tmp_path):
+    cache_file = str(tmp_path / "plans.json")
+    tune_cache.clear_memo()
+    tune_cache.plan(op="ata", m=512, n=256, cache_file=cache_file)
+    stats = tune_cache.cache_stats()
+    assert stats["miss"] == 1 and stats["memo_hit"] == 0
+    tune_cache.plan(op="ata", m=512, n=256, cache_file=cache_file)
+    assert tune_cache.cache_stats()["memo_hit"] == 1
+
+
+def test_cache_load_failure_counted_and_logged(tmp_path, caplog):
+    bad = tmp_path / "corrupt.json"
+    bad.write_text("{not json")
+    with caplog.at_level(logging.WARNING, logger="repro.tune.cache"):
+        assert tune_cache.load_cache(str(bad)) == {}
+    assert tune_cache.cache_stats()["load_failure"] == 1
+    assert any("unreadable" in r.message for r in caplog.records)
+    # a missing file stays the silent first-run path, not a failure
+    caplog.clear()
+    assert tune_cache.load_cache(str(tmp_path / "absent.json")) == {}
+    assert tune_cache.cache_stats()["load_failure"] == 1
+    assert not caplog.records
+
+
+def test_cache_migration_sanitization_and_skip_counters(tmp_path, caplog):
+    plan = cost.default_plan("ata", 128, 128, backend="cpu")
+    good = plan.to_json()
+    weird = dict(good, leaf_dispatch="quantum")
+    payload = {
+        "schema": "v3",
+        "plans": {
+            "v1|ata|old-schema-key": good,       # migrated
+            "v3|ata|weird-dispatch": weird,      # sanitized
+            "v3|ata|broken": {"nonsense": 1},    # skipped
+        },
+    }
+    path = tmp_path / "plans.json"
+    path.write_text(json.dumps(payload))
+    with caplog.at_level(logging.WARNING, logger="repro.tune.cache"):
+        plans = tune_cache.load_cache(str(path))
+    assert set(plans) == {"v3|ata|old-schema-key", "v3|ata|weird-dispatch"}
+    assert plans["v3|ata|weird-dispatch"].leaf_dispatch == "unrolled"
+    stats = tune_cache.cache_stats()
+    assert stats["migrated"] == 1
+    assert stats["sanitized"] == 1
+    assert stats["skipped_entries"] == 1
+    assert any("skipped 1" in r.message for r in caplog.records)
+
+
+# ---------------------------------------------------------------------------
+# analysis.hlo collective-bytes edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_collective_bytes_async_tuple_start_counts_output_only():
+    # async tuple form: (operand, result) — the operand element aliases the
+    # input buffer and must not be double-counted
+    hlo = """
+  %ag.s = (f32[32,64]{1,0}, f32[128,64]{1,0}) all-gather-start(f32[32,64] %p), dim=0
+  %ag.d = f32[128,64]{1,0} all-gather-done((f32[32,64], f32[128,64]) %ag.s)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 128 * 64 * 4
+
+
+def test_collective_bytes_async_nontuple_start_and_done_dedup():
+    hlo = """
+  %ar.s = bf16[64,64]{1,0} all-reduce-start(bf16[64,64]{1,0} %p)
+  %ar.d = bf16[64,64]{1,0} all-reduce-done(bf16[64,64]{1,0} %ar.s)
+"""
+    assert collective_bytes(hlo)["all-reduce"] == 64 * 64 * 2
+
+
+def test_collective_bytes_variadic_tuple_sums_all_elements():
+    hlo = (
+        "%aa = (f32[8,8]{1,0}, bf16[4,4]{1,0}, s8[16]{0}) "
+        "all-to-all(f32[8,8] %a, bf16[4,4] %b, s8[16] %c)"
+    )
+    got = collective_bytes(hlo)
+    assert got["all-to-all"] == 8 * 8 * 4 + 4 * 4 * 2 + 16
+
+
+def test_collective_bytes_unknown_dtypes_skipped():
+    hlo = """
+  %t = token[] all-reduce(token[] %tok)
+  %m = (f32[4]{0}, token[]) all-to-all(f32[4] %x, token[] %tok)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-reduce"] == 0
+    assert got["all-to-all"] == 4 * 4   # token element contributes nothing
+
+
+def test_collective_bytes_start_tuple_with_context_elements():
+    # some async lowerings append context/scratch elements after the result
+    hlo = (
+        "%cp.s = (u8[16]{0}, u8[16]{0}, u32[], u32[]) "
+        "collective-permute-start(u8[16] %x)"
+    )
+    assert collective_bytes(hlo)["collective-permute"] == 16
+
+
+# ---------------------------------------------------------------------------
+# snapshot composition: spans + calibration ride along
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_includes_spans_and_calibration():
+    trace.enable()
+    try:
+        with obs.span("demo"):
+            pass
+    finally:
+        trace.disable()
+    calibrate.record_pair("k", "ata", "cpu", 1e-3, 2e-3)
+    snap = metrics.validate_snapshot(metrics.snapshot())
+    assert snap["spans"] == {"demo": 1}
+    assert snap["calibration"][0]["key"] == "k"
