@@ -75,7 +75,7 @@ import json
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import make_mesh, shard_map
-from repro.analysis.hlo import collective_bytes
+from repro.analysis.hlo import collective_bytes, compiled_text
 from repro.core.distributed import ata_tile_parallel, gram_rowshard
 from repro.obs import metrics as obs_metrics
 m, n = @M@, @N@
@@ -89,7 +89,7 @@ for mode in ("dense", "packed"):
             a, mesh, task_axis="model", row_axis="data", out=mode),
         in_shardings=(sh,),
     )
-    hlo = f.lower(a_abs).compile().as_text()
+    hlo = compiled_text(f, a_abs)
     obs_metrics.record_collective_bytes(hlo, prefix="collective_bytes.tile_" + mode)
     out["tile_" + mode] = collective_bytes(hlo)
 row_abs = jax.ShapeDtypeStruct((m, n), jnp.float32)
@@ -99,7 +99,7 @@ for mode in ("dense", "packed"):
         lambda x, mode=mode: gram_rowshard(x, "data", out=mode),
         mesh=make_mesh((8,), ("data",)),
         in_specs=(P("data", None),), out_specs=out_spec))
-    hlo = f.lower(row_abs).compile().as_text()
+    hlo = compiled_text(f, row_abs)
     obs_metrics.record_collective_bytes(hlo, prefix="collective_bytes.rowshard_" + mode)
     out["rowshard_" + mode] = collective_bytes(hlo)
 print("BYTES " + json.dumps(out))

@@ -113,6 +113,20 @@ def main():
     print(obs.report())  # predicted-vs-measured drift table (DESIGN.md §8)
     obs.disable()
 
+    # --- 8. static contract checks: check.trace_plan → check.run ------------
+    # The structural invariants behind all of the above (no dense (n, n)
+    # square on packed paths, no materialized Aᵀ, dot/launch counts equal
+    # to the cost model's closed forms, f32 accumulation) are machine-
+    # checked: trace the exact planned callable and run the rule registry
+    # (DESIGN.md §9; CI gates on `python -m repro.check`).
+    from repro import check
+
+    art = check.trace_plan(p)   # the step-1 packed plan
+    report = check.run(art)
+    print(f"repro.check: {len(list(check.rule_ids()))} rules over "
+          f"'{art.label}' → {len(report.violations)} violations")
+    assert not report.violations, report.summary()
+
 
 if __name__ == "__main__":
     main()

@@ -18,7 +18,13 @@ from __future__ import annotations
 import re
 from typing import Dict
 
-__all__ = ["collective_bytes", "collective_seconds", "DTYPE_BYTES", "COLLECTIVE_KINDS"]
+__all__ = [
+    "collective_bytes",
+    "collective_seconds",
+    "compiled_text",
+    "DTYPE_BYTES",
+    "COLLECTIVE_KINDS",
+]
 
 COLLECTIVE_KINDS = (
     "all-reduce",
@@ -42,6 +48,23 @@ _INSTR_RE = re.compile(
     r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
     r"(?P<suffix>-start|-done)?\b"
 )
+
+
+def compiled_text(fn, *abstract_args) -> str:
+    """Lower + compile ``fn`` once and return the per-device HLO text —
+    the input :func:`collective_bytes` parses.
+
+    The single lowering path shared by every collective-accounting
+    consumer (``repro.check``'s collective-budget rule,
+    ``obs.metrics.record_collective_bytes`` call sites, the distributed
+    benchmarks): callers that only need byte counts never hold the
+    compiled executable, and nothing lowers the same function twice.
+    ``fn`` may already be jitted (it is reused as-is) or a plain callable.
+    """
+    import jax
+
+    jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+    return jitted.lower(*abstract_args).compile().as_text()
 
 
 def _shape_bytes(type_str: str) -> int:

@@ -1,0 +1,58 @@
+"""CLI: ``python -m repro.check`` — the CI contract gate.
+
+Traces the canonical plan grid (or, with ``--distributed``, the SPMD
+schedules on the active mesh), runs the rule registry over every artifact,
+prints a summary, optionally writes the JSON report, and exits nonzero on
+any unallowlisted error-severity finding.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.check",
+        description="Static contract checks over traced plan artifacts.")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the repro.check/v1 JSON report here")
+    ap.add_argument("--quick", action="store_true",
+                    help="three-artifact smoke subset instead of the grid")
+    ap.add_argument("--distributed", action="store_true",
+                    help="check the SPMD schedules (needs >1 device)")
+    ap.add_argument("--lower", action="store_true",
+                    help="also compile each grid artifact (attaches HLO)")
+    ap.add_argument("--rules", metavar="IDS",
+                    help="comma-separated rule ids (default: all)")
+    ap.add_argument("--list", action="store_true", dest="list_rules",
+                    help="list registered rules and exit")
+    args = ap.parse_args(argv)
+
+    from repro.check import harness, rules
+
+    if args.list_rules:
+        for rid in rules.rule_ids():
+            r = rules.REGISTRY[rid]
+            first = r.doc.splitlines()[0] if r.doc else ""
+            print(f"{rid:20s} [{r.severity}] {first}")
+        return 0
+
+    ids = args.rules.split(",") if args.rules else None
+    if args.distributed:
+        report = harness.run_distributed(verbose=True)
+    else:
+        report = harness.run_grid(rules=ids, lower=args.lower,
+                                  quick=args.quick, verbose=True)
+    print(report.summary())
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report.to_json(), f, indent=1, sort_keys=True)
+        print(f"report written to {args.json}")
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,7 +22,10 @@ wrappers (``repro.kernels.ops``):
 
 * **Batched grid** (leading dim = leaf batch): an optional leading operand
   dimension becomes the leading (``"parallel"``) grid dimension — the whole
-  batch is ONE kernel launch, never a vmap-of-pallas. The batched-leaf
+  batch is ONE kernel launch, never a vmap-of-pallas (machine-checked: the
+  ``no-vmap-of-pallas`` rule of ``repro.check`` flags any traced
+  ``pallas_call`` with nonempty ``grid_mapping.vmapped_dims``; launch
+  counts are policed by ``launch-budget``). The batched-leaf
   recursion (``Plan.leaf_dispatch='batched'``) relies on this: it flattens
   its leaf stack (and any operand batch) into exactly that one leading dim,
   so all ``7^L`` Strassen leaves / all ``4^L`` diagonal leaves land in a
@@ -42,7 +45,8 @@ wrappers (``repro.kernels.ops``):
   before the MXU dot; the epilogue writes one product per leaf into the
   level's decode stack. No operand-combination stack is ever materialized
   in HBM — the combine traffic the batched dispatch pays simply does not
-  exist. The blocked dot inside (chunk shapes, contraction order, f32
+  exist (machine-checked: the ``no-operand-stacks`` rule of ``repro.check``
+  flags any 7-multiple leaf-operand stack in a fused-dispatch jaxpr). The blocked dot inside (chunk shapes, contraction order, f32
   VMEM accumulation, flush cast) is identical to the unbatched kernels',
   which is what keeps all three leaf dispatches bitwise-equal for f32/f64
   operands (sub-f32 operands forfeit bitwise: the in-kernel combine feeds

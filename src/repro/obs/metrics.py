@@ -21,6 +21,8 @@ Naming convention (dotted, lowercase):
     kernels.launch.*   Pallas wrapper launches (traced)
     solve.*            solver front-door counters
     collective_bytes.* per-kind HLO collective payload (via record_collective_bytes)
+    check.*            repro.check analyzer accounting: rules_run /
+                       artifacts / findings.<rule-id> / violations
 
 Snapshot schema (``SNAPSHOT_SCHEMA``): see :func:`snapshot` /
 :func:`validate_snapshot` — the contract the CI obs-smoke step asserts.

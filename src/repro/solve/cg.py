@@ -133,7 +133,10 @@ def cg_lstsq(
     obs.metrics.set_gauge("solve.cg.iters", iters)
 
     def matvec(p):
-        ap = a @ p                         # (m, r): plain NN dot
+        # (m, r) plain NN dot — accumulation width pinned so the operator
+        # keeps f32 accumulation even if the cast above is ever relaxed to
+        # sub-f32 operands (the repro.check acc-dtype contract)
+        ap = jnp.matmul(a, p, preferred_element_type=jnp.float32)
         atap = strassen_tn(a, ap, **kw)    # Aᵀ(A·p): planned TN product
         return atap + ridge * p if ridge else atap
 

@@ -260,7 +260,13 @@ def cholesky(
         s = tiles[(j, j)]
         if j:
             lrow = jnp.stack([out[(j, k)] for k in range(j)], axis=0)
-            s = s - jnp.einsum("k...ab,k...cb->...ac", lrow, lrow)
+            # pin the Schur accumulation width: einsum would otherwise
+            # inherit the operand dtype (sub-f32 for a bf16 factor) —
+            # the repro.check acc-dtype contract
+            s = s - jnp.einsum(
+                "k...ab,k...cb->...ac", lrow, lrow,
+                preferred_element_type=jnp.float32,
+            )
         # the LOWER half of a packed diagonal tile is the authoritative
         # content (straddling producers may leave intra-tile upper corners
         # unwritten — to_dense's mirror reconstructs them); mirror it here
@@ -282,7 +288,10 @@ def cholesky(
             li = jnp.stack(
                 [jnp.stack([out[(i, k)] for k in range(j)], 0) for i in rows], 0
             )
-            p = p - jnp.einsum("rk...ab,k...cb->r...ac", li, lrow)
+            p = p - jnp.einsum(
+                "rk...ab,k...cb->r...ac", li, lrow,
+                preferred_element_type=jnp.float32,
+            )
         ljj = jnp.broadcast_to(out[(j, j)], p.shape)
         panel = _flat_call(base_trsm, ljj, p)
         for r, i in enumerate(rows):

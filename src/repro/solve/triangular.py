@@ -96,13 +96,21 @@ def solve_triangular(
             if done:
                 lt = jnp.stack([f.block(i, j) for j in done], axis=0)
                 xt = jnp.stack([xs[j] for j in done], axis=0)
-                c = c - jnp.einsum("k...ab,k...br->...ar", lt, xt)
+                # f32 accumulation regardless of operand dtype (the
+                # repro.check acc-dtype contract)
+                c = c - jnp.einsum(
+                    "k...ab,k...br->...ar", lt, xt,
+                    preferred_element_type=jnp.float32,
+                )
         else:
             done = range(i + 1, nb)  # subtract L[j,i]ᵀ·x_j, j > i
             if done:
                 lt = jnp.stack([f.block(j, i) for j in done], axis=0)
                 xt = jnp.stack([xs[j] for j in done], axis=0)
-                c = c - jnp.einsum("k...ba,k...br->...ar", lt, xt)
+                c = c - jnp.einsum(
+                    "k...ba,k...br->...ar", lt, xt,
+                    preferred_element_type=jnp.float32,
+                )
         xs[i] = solve_diag(f.block(i, i), c, transpose=transpose)
 
     x = jnp.concatenate([xs[i] for i in range(nb)], axis=-2)[..., :n, :]

@@ -170,26 +170,40 @@ def test_ata_packed_bitwise_matches_dense(m, n):
 
 def test_ata_packed_no_intermediate_square_transposes():
     """No full-square (2-D, > n_base) transpose anywhere in the packed path;
-    dense output takes exactly one — the root mirror."""
+    dense output takes exactly one — the root mirror. Both halves run the
+    repro.check ``no-full-transpose`` rule; the dense half's root-mirror
+    allowance is the ``mirror_budget`` override (and dropping the budget
+    is the positive control: the rule must fire on that mirror)."""
+    from repro import check
+
     n_base = 64
-    a = jnp.zeros((256, 256), jnp.float32)
+    n = 256
+    a = jnp.zeros((n, n), jnp.float32)
 
-    def transposes_2d(fn):
-        jaxpr = jax.make_jaxpr(fn)(a)
-        return [
-            eqn.outvars[0].aval.shape
-            for eqn in jaxpr.jaxpr.eqns
-            if eqn.primitive.name == "transpose"
-            and len(eqn.outvars[0].aval.shape) == 2
-        ]
+    def trace(fn):
+        return jax.make_jaxpr(fn)(a).jaxpr
 
-    packed = transposes_2d(lambda x: ata(x, n_base=n_base, out="packed"))
-    dense = transposes_2d(lambda x: ata(x, n_base=n_base))
     # leaf-tile mirrors (≤ n_base per dim) are the base-case symmetry
     # contract; anything larger would be a reintroduced square mirror.
-    assert all(max(s) <= n_base for s in packed), packed
-    big = [s for s in dense if max(s) > n_base]
-    assert big == [(256, 256)], big
+    packed = check.Artifact(
+        label="ata:packed", jaxpr=trace(lambda x: ata(x, n_base=n_base,
+                                                      out="packed")),
+        overrides={"max_transpose_dim": n_base, "mirror_budget": 0})
+    assert not check.run(packed, rules=["no-full-transpose"]).violations
+
+    dense_jaxpr = trace(lambda x: ata(x, n_base=n_base))
+    dense = check.Artifact(
+        label="ata:dense", jaxpr=dense_jaxpr,
+        overrides={"max_transpose_dim": n_base, "mirror_budget": 1,
+                   "mirror_shape": (n, n)})
+    assert not check.run(dense, rules=["no-full-transpose"]).violations
+    # positive control: with no mirror budget the root (n, n) mirror must
+    # be flagged — exactly once
+    no_budget = check.Artifact(
+        label="ata:dense-no-budget", jaxpr=dense_jaxpr,
+        overrides={"max_transpose_dim": n_base, "mirror_budget": 0})
+    fired = check.run(no_budget, rules=["no-full-transpose"]).violations
+    assert [f.shape for f in fired] == [(n, n)], fired
 
 
 def test_ata_batched_matches_einsum():

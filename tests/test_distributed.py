@@ -71,24 +71,14 @@ def test_tile_parallel_packed_single_device():
     )
 
 
-def _walk_eqns(jaxpr):
-    """Yield every eqn including those of nested (shard_map/cond) jaxprs."""
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            sub = getattr(v, "jaxpr", None)
-            if sub is not None:
-                yield from _walk_eqns(sub)
-            elif isinstance(v, (list, tuple)):
-                for x in v:
-                    s = getattr(x, "jaxpr", None)
-                    if s is not None:
-                        yield from _walk_eqns(s)
-
-
 def test_tile_parallel_packed_no_dense_intermediate():
-    """The packed path's jaxpr must not materialize any dense (n, n) or
-    (n_pad, n_pad) square — the whole point of packed retrieval."""
+    """The packed path's jaxpr must not materialize any dense (n, n)
+    square — the whole point of packed retrieval. Runs the repro.check
+    ``no-dense-square`` rule (its walker descends shard_map/cond bodies)
+    with the shape set pinned by override — the tile schedule has no Plan
+    object here."""
+    from repro import check
+
     mesh = jax.make_mesh((1,), ("model",))
     n = 256  # aligned: w == packed bn == 128 → pure-slice retrieval
     a_abs = jax.ShapeDtypeStruct((128, n), jnp.float32)
@@ -97,12 +87,10 @@ def test_tile_parallel_packed_no_dense_intermediate():
             a, mesh, task_axis="model", n_base=64, nb=2, out="packed"
         )
     )(a_abs)
-    for eqn in _walk_eqns(jaxpr.jaxpr):
-        for v in eqn.outvars:
-            shape = tuple(getattr(v.aval, "shape", ()))
-            assert shape[-2:] != (n, n), (
-                f"dense square {shape} materialized by {eqn.primitive}"
-            )
+    art = check.Artifact(label="tile:packed", jaxpr=jaxpr.jaxpr,
+                         overrides={"forbidden_squares": {(n, n)}})
+    report = check.run(art, rules=["no-dense-square"])
+    assert not report.violations, report.summary()
 
 
 class _StubMesh:
@@ -247,7 +235,8 @@ f = jax.jit(lambda a: ata_tile_parallel(
 c = f(a)
 np.testing.assert_allclose(np.asarray(c), np.asarray(a.T @ a), rtol=1e-4, atol=1e-4)
 # collective check: the psum reduces the packed tile stack, not dense (n,n)
-hlo = f.lower(a).compile().as_text()
+from repro.analysis.hlo import compiled_text
+hlo = compiled_text(f, a)
 assert "all-reduce" in hlo or "all-gather" in hlo
 print("OK")
 """
@@ -354,7 +343,7 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.distributed import gram_rowshard
-from repro.analysis.hlo import collective_bytes
+from repro.analysis.hlo import collective_bytes, compiled_text
 mesh = jax.make_mesh((8,), ("data",))
 r = np.random.default_rng(7)
 a = jnp.asarray(r.standard_normal((512, 96)), dtype=jnp.float32)
@@ -374,8 +363,8 @@ np.testing.assert_allclose(np.asarray(packed.to_dense()), np.asarray(dense),
 np.testing.assert_allclose(np.asarray(dense), np.asarray(a.T @ a),
                            rtol=1e-4, atol=1e-4)
 # the psum payload is the packed stack: T/nb^2 = 10/16 of the dense bytes
-bd = sum(collective_bytes(fd.lower(a).compile().as_text()).values())
-bp = sum(collective_bytes(fp.lower(a).compile().as_text()).values())
+bd = sum(collective_bytes(compiled_text(fd, a)).values())
+bp = sum(collective_bytes(compiled_text(fp, a)).values())
 assert 0 < bp < 0.7 * bd, (bp, bd)
 print("OK")
 """

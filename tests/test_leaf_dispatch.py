@@ -259,8 +259,11 @@ def test_fused_under_jit_and_grad():
 
 
 def _dot_count(fn, *args):
+    from repro import check
+
     jaxpr = jax.make_jaxpr(fn)(*args)
-    return sum(1 for e in jaxpr.jaxpr.eqns if e.primitive.name == "dot_general")
+    return sum(1 for s in check.walk_eqns(jaxpr.jaxpr)
+               if s.eqn.primitive.name == "dot_general")
 
 
 def test_batched_ata_emits_two_dots():
@@ -313,52 +316,58 @@ def test_batched_jaxpr_total_size_grows_linearly_not_geometrically():
     assert b3 < u3 / 10
 
 
-def _walk_shapes(jaxpr, shapes):
-    for e in jaxpr.eqns:
-        shapes.extend(tuple(v.aval.shape) for v in e.outvars)
-        for p in e.params.values():
-            for q in p if isinstance(p, (tuple, list)) else (p,):
-                inner = getattr(q, "jaxpr", q)
-                if hasattr(inner, "eqns"):
-                    _walk_shapes(inner, shapes)
-
-
 def test_fused_jaxpr_one_dot_per_leaf_and_zero_operand_stacks():
     """The fused XLA path's acceptance property: every leaf is its own dot
     (the combines happen per-leaf at trace time, 7^L dots total) and NO
-    operand-combination stack is ever materialized — no equation in the
-    jaxpr produces an array of A-operand or B-operand leaf-stack shape.
-    Rectangular dims keep the operand block shapes distinguishable from
-    the product/decode shapes; the batched dispatch's jaxpr contains both
-    operand stacks, which keeps the assertion honest."""
+    operand-combination stack is ever materialized — the repro.check
+    ``no-operand-stacks`` + ``dot-budget`` rules run against the real
+    fused program. Rectangular dims keep the operand block shapes
+    distinguishable from the product/decode shapes; as the positive
+    control, the *batched* dispatch's jaxpr (which materializes both
+    operand stacks by design) must FIRE the rule when presented under a
+    fused-claiming plan."""
+    from repro import check
+
     m, n, k, n_base = 96, 32, 16, 4   # L = 2 -> 49 leaves
     a = jnp.zeros((m, n), jnp.float32)
     b = jnp.zeros((m, k), jnp.float32)
-    mb, nb, kb = m // 4, n // 4, k // 4
+    nb, kb = n // 4, k // 4
 
-    def shapes(ld):
-        jaxpr = jax.make_jaxpr(
+    def trace(ld):
+        return jax.make_jaxpr(
             lambda x, y: strassen_tn(
                 x, y, n_base=n_base, variant="strassen", leaf_dispatch=ld
             )
         )(a, b)
-        out = []
-        _walk_shapes(jaxpr.jaxpr, out)
-        return out
 
-    n_dots = _dot_count(
-        lambda x, y: strassen_tn(
-            x, y, n_base=n_base, variant="strassen", leaf_dispatch="fused"
-        ),
-        a, b,
-    )
+    def plan(ld):
+        return dataclasses.replace(
+            cost.default_plan("gemm_tn", m, n, k, backend="cpu"),
+            algorithm="strassen", leaf_dispatch=ld, n_base=n_base,
+            use_kernels=False,
+        )
+
+    fused = trace("fused")
+    art = check.Artifact(label="gemm:fused", jaxpr=fused.jaxpr,
+                         plan=plan("fused"))
+    report = check.run(art, rules=["no-operand-stacks", "dot-budget"])
+    assert not report.violations, report.summary()
+    # 49 = one dot per leaf (the dot-budget closed form, asserted again
+    # directly so a registry regression can't silently weaken this test)
+    n_dots = sum(1 for s in check.walk_eqns(fused.jaxpr)
+                 if s.eqn.primitive.name == "dot_general")
     assert n_dots == 49, n_dots
-    a_stack, b_stack = (49, mb, nb), (49, mb, kb)
-    fused = shapes("fused")
-    assert a_stack not in fused and b_stack not in fused
-    assert (49, nb, kb) in fused          # the product stack IS materialized
-    batched = shapes("batched")
-    assert a_stack in batched and b_stack in batched
+    # the product stack IS materialized, by design
+    fused_shapes = [tuple(v.aval.shape) for s in check.walk_eqns(fused.jaxpr)
+                    for v in s.eqn.outvars]
+    assert (49, nb, kb) in fused_shapes
+    # positive control: the batched dispatch materializes both operand
+    # stacks — under a fused-claiming plan the rule must fire
+    batched = trace("batched")
+    art_b = check.Artifact(label="gemm:batched-as-fused", jaxpr=batched.jaxpr,
+                           plan=plan("fused"))
+    fired = check.run(art_b, rules=["no-operand-stacks"])
+    assert fired.violations, "no-operand-stacks failed to fire on a stack"
 
 
 # ---------------------------------------------------------------------------

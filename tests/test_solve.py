@@ -291,24 +291,13 @@ def test_lstsq_factor_vs_cg_agree():
                                atol=1e-3)
 
 
-def _walk_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            sub = getattr(v, "jaxpr", None)
-            if sub is not None:
-                yield from _walk_eqns(sub)
-            elif isinstance(v, (list, tuple)):
-                for x in v:
-                    s = getattr(x, "jaxpr", None)
-                    if s is not None:
-                        yield from _walk_eqns(s)
-
-
 def test_lstsq_packed_jaxpr_has_no_dense_square():
     """The acceptance criterion: the whole planned factor pipeline —
     packed gram, packed Cholesky, substitutions — must not materialize any
-    (n, n) or (n_pad, n_pad) dense square in its jaxpr."""
+    (n, n) or (n_pad, n_pad) dense square in its jaxpr (the repro.check
+    ``no-dense-square`` rule, run here against the real solve program)."""
+    from repro import check
+
     # n > packed_block so block tiles != the square; m chosen so no input
     # row-slab of the recursion is coincidentally (n, n) (m = 2n would be)
     m, n, r = 384, 256, 4
@@ -325,14 +314,10 @@ def test_lstsq_packed_jaxpr_has_no_dense_square():
     jaxpr = jax.make_jaxpr(
         lambda a, b: solve.lstsq(a, b, ridge=1e-4, plan=plan)
     )(a_abs, b_abs)
-    bn = plan.packed_block
-    n_pad = -(-n // bn) * bn
-    for eqn in _walk_eqns(jaxpr.jaxpr):
-        for v in eqn.outvars:
-            shape = tuple(getattr(v.aval, "shape", ()))
-            assert shape[-2:] not in {(n, n), (n_pad, n_pad)}, (
-                f"dense square {shape} materialized by {eqn.primitive}"
-            )
+    art = check.Artifact(label="solve:factor:packed", jaxpr=jaxpr.jaxpr,
+                         plan=plan)
+    report = check.run(art, rules=["no-dense-square"])
+    assert not report.violations, report.summary()
 
 
 # ---------------------------------------------------------------------------
@@ -366,17 +351,20 @@ def test_cg_vector_rhs_and_early_stop_masking():
 
 def test_cg_lstsq_never_forms_gram():
     """CG's jaxpr must hold no (n, n) intermediate either — the gram is an
-    operator, not a matrix."""
+    operator, not a matrix. Plan-less program: the ``forbidden_squares``
+    override pins the rule's shape set directly."""
+    from repro import check
+
     m, n = 256, 64
     a_abs = jax.ShapeDtypeStruct((m, n), jnp.float32)
     b_abs = jax.ShapeDtypeStruct((m,), jnp.float32)
     jaxpr = jax.make_jaxpr(
         lambda a, b: solve.cg_lstsq(a, b, iters=8)
     )(a_abs, b_abs)
-    for eqn in _walk_eqns(jaxpr.jaxpr):
-        for v in eqn.outvars:
-            shape = tuple(getattr(v.aval, "shape", ()))
-            assert shape[-2:] != (n, n)
+    art = check.Artifact(label="solve:cg", jaxpr=jaxpr.jaxpr,
+                         overrides={"forbidden_squares": {(n, n)}})
+    report = check.run(art, rules=["no-dense-square"])
+    assert not report.violations, report.summary()
 
 
 # ---------------------------------------------------------------------------
