@@ -12,6 +12,15 @@ loop) lowers the dense and packed output modes of ``ata_tile_parallel``
 and ``gram_rowshard`` on an 8-fake-device mesh and records the per-device
 collective bytes from the compiled HLO — the Prop. 4.2 low(C) saving as
 measured collective payload, tracked in ``BENCH_distributed.json``.
+
+The **BFS/DFS rows** (``collectives_bfsdfs_*``, also compile-only and
+smoke-safe) lower the CAPS-style schedule with the *planner-selected*
+interleaving at three mesh shapes and record its collective bytes next to
+the per-level ``prop42_msgs``/``prop42_words`` attribution of
+``tune.cost.comm_levels`` — the perf-diff surface that catches
+communication regressions, not just wall clock. ``fig6_bfsdfs_P*`` times
+the planned front door (``tune.apply.ata_distributed_with_plan``)
+end-to-end against the same 1-rank baseline as ``fig6_atad_P*``.
 """
 
 from __future__ import annotations
@@ -139,6 +148,145 @@ def run_collectives(m: int = 1024, n: int = 1024):
         )
 
 
+# compile-only child: the BFS/DFS schedule with planner-selected
+# interleaving at several mesh shapes (token-templated like above).
+_BFSDFS_CHILD = r"""
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh
+from repro.analysis.hlo import collective_bytes, compiled_text
+from repro.core.distributed import ata_bfs_dfs
+from repro.obs import metrics as obs_metrics
+from repro.tune import cost
+m, n = @M@, @N@
+out = {}
+for dd, dm in ((2, 4), (4, 2), (8, 1)):
+    mesh = make_mesh((dd, dm), ("data", "model"))
+    sh = NamedSharding(mesh, P("data", None))
+    a_abs = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    for mode in ("dense", "packed"):
+        plans = cost.candidates("ata", m, n, out=mode, backend="cpu",
+                                devices=dm, row_devices=dd)
+        top = next((p for p in plans
+                    if p.comm_schedule and "B" in p.comm_schedule), None)
+        if top is None:
+            continue
+        f = jax.jit(
+            lambda a, top=top, mesh=mesh, mode=mode: ata_bfs_dfs(
+                a, mesh, task_axis="model", row_axis="data",
+                interleaving=top.comm_schedule, nb=top.nb,
+                packed_block=top.packed_block, out=mode),
+            in_shardings=(sh,),
+        )
+        hlo = compiled_text(f, a_abs)
+        key = "bfsdfs_%dx%d_%s" % (dd, dm, mode)
+        obs_metrics.record_collective_bytes(
+            hlo, prefix="collective_bytes." + key)
+        levels = cost.comm_levels(top.comm_schedule, top.nb, top.tile_w,
+                                  dm, dd, out=mode)
+        out[key] = dict(bytes=collective_bytes(hlo), cs=top.comm_schedule,
+                        nb=top.nb, tile_w=top.tile_w, levels=levels)
+print("BYTES " + json.dumps(out))
+"""
+
+
+def _run_bfsdfs_child(p: int, m: int, n: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+    env["PYTHONPATH"] = os.path.abspath("src")
+    script = _BFSDFS_CHILD.replace("@M@", str(m)).replace("@N@", str(n))
+    out = subprocess.run(
+        [sys.executable, "-c", script],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    mt = re.search(r"BYTES (\{.*\})", out.stdout)
+    if not mt:
+        raise RuntimeError(f"bfsdfs child failed: {out.stderr[-800:]}")
+    return json.loads(mt.group(1))
+
+
+def run_collectives_bfsdfs(m: int = 1024, n: int = 1024):
+    """BFS/DFS collective bytes + per-level α-β attribution, per mesh."""
+    data = _run_bfsdfs_child(8, m, n)
+    for dd, dm in ((2, 4), (4, 2), (8, 1)):
+        kd, kp = f"bfsdfs_{dd}x{dm}_dense", f"bfsdfs_{dd}x{dm}_packed"
+        if kd not in data or kp not in data:
+            continue
+        dense = sum(data[kd]["bytes"].values())
+        packed = sum(data[kp]["bytes"].values())
+        ratio = packed / dense if dense else float("nan")
+        lv = data[kp]["levels"]
+        msgs = [round(l["msgs"], 1) for l in lv]
+        words = [int(round(l["words"])) for l in lv]
+        tags = "".join(l["tag"] for l in lv)
+        emit(
+            f"collectives_bfsdfs_{dd}x{dm}_{m}x{n}",
+            0.0,
+            f"cs={data[kp]['cs']} nb={data[kp]['nb']} "
+            f"dense_bytes={dense} packed_bytes={packed} ratio={ratio:.3f} "
+            f"levels={tags} prop42_msgs={msgs} prop42_words={words}",
+            shape=(m, n),
+            comm_schedule=data[kp]["cs"],
+            nb=data[kp]["nb"],
+            tile_w=data[kp]["tile_w"],
+            dense_bytes=dense,
+            packed_bytes=packed,
+            packed_over_dense=round(ratio, 4),
+            prop42_msgs=msgs,
+            prop42_words=words,
+        )
+
+
+_BFS_FIG6_CHILD = r"""
+import jax, jax.numpy as jnp, numpy as np, time
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh
+from repro.tune import cost
+from repro.tune.apply import ata_distributed_with_plan
+devs = len(jax.devices())
+d = {d}; m = devs // d
+mesh = make_mesh((d, m), ("data", "model"))
+plans = cost.candidates("ata", {m_}, {n}, out="packed", backend="cpu",
+                        devices=m, row_devices=d)
+top = next(p for p in plans if p.comm_schedule and "B" in p.comm_schedule)
+r = np.random.default_rng(0)
+a_host = r.standard_normal(({m_}, {n})).astype(np.float32)
+f = jax.jit(lambda a: ata_distributed_with_plan(
+    a, mesh, top, task_axis="model", row_axis="data"))
+sh = NamedSharding(mesh, P("data", None))
+a = jax.device_put(jnp.asarray(a_host), sh)
+jax.block_until_ready(f(a).blocks)
+tc, tt = [], []
+for _ in range(5):
+    t0 = time.perf_counter()
+    a = jax.device_put(jnp.asarray(a_host), sh)      # distribute
+    c = f(a)                                          # compute
+    jax.block_until_ready(c.blocks)
+    t1 = time.perf_counter()
+    _ = np.asarray(c.blocks)                          # retrieve (packed)
+    t2 = time.perf_counter()
+    tc.append(t1 - t0); tt.append(t2 - t0)
+print("PLAN", top.comm_schedule, top.nb)
+print("TIME", float(np.median(tc)), float(np.median(tt)))
+"""
+
+
+def _run_bfs_fig6_child(p: int, d: int, m: int, n: int):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+    env["PYTHONPATH"] = os.path.abspath("src")
+    out = subprocess.run(
+        [sys.executable, "-c", _BFS_FIG6_CHILD.format(d=d, m_=m, n=n)],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    mt = re.search(r"TIME ([0-9.e-]+) ([0-9.e-]+)", out.stdout)
+    pl = re.search(r"PLAN (\S+) (\d+)", out.stdout)
+    if not mt or not pl:
+        raise RuntimeError(f"bfs fig6 child failed (P={p}): {out.stderr[-500:]}")
+    return float(mt.group(1)), float(mt.group(2)), pl.group(1), int(pl.group(2))
+
+
 def _prop42(n: int, p: int):
     """Prop. 4.2 analytic latency (messages) and bandwidth (words)."""
     ell = ell_distributed(p)
@@ -151,8 +299,10 @@ def _prop42(n: int, p: int):
 
 def run():
     # packed-vs-dense collective bytes: cheap (compile-only), runs in
-    # --smoke too — this is the CI-tracked Prop. 4.2 retrieval number.
+    # --smoke too — this is the CI-tracked Prop. 4.2 retrieval number,
+    # and the BFS/DFS rows are the communication-regression surface.
     run_collectives()
+    run_collectives_bfsdfs()
     if smoke():
         return
     m, n = 4096, 2048
@@ -166,6 +316,17 @@ def run():
             tt,
             f"compute_us={tc*1e6:.0f} speedup={base_t/tt:.2f} "
             f"ell={ell_distributed(p)} prop42_msgs={lat} prop42_words={bw:.2e}",
+        )
+    # the BFS/DFS schedule through the planned front door, same baseline:
+    # packed-native retrieval (the schedule's root mode) + the tri-direct
+    # reduce-scatter replacing the psum + root-gather pair.
+    for p, d in [(2, 2), (4, 2), (8, 2)]:
+        tc, tt, cs, nb_sel = _run_bfs_fig6_child(p, d, m, n)
+        emit(
+            f"fig6_bfsdfs_P{p}_{m}x{n}",
+            tt,
+            f"compute_us={tc*1e6:.0f} speedup={base_t/tt:.2f} "
+            f"cs={cs} nb={nb_sel}",
         )
     # Table 1 analogue: SM (all devices one task axis) vs DM (2-level) at
     # growing n — speedup of the 2-level layout including retrieval.

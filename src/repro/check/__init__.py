@@ -26,6 +26,7 @@ from repro.check.artifacts import Artifact, abstract_args, plan_label, trace_pla
 from repro.check.findings import Allow, Finding, Report, REPORT_SCHEMA
 from repro.check.harness import (
     DEFAULT_ALLOWLIST,
+    bfsdfs_plans,
     canonical_plans,
     distributed_plans,
     run_distributed,
@@ -38,5 +39,6 @@ __all__ = [
     "REGISTRY", "DEFAULT_ALLOWLIST",
     "abstract_args", "plan_label", "trace_plan", "walk_eqns",
     "rule", "rule_ids", "run", "run_many",
-    "canonical_plans", "run_grid", "distributed_plans", "run_distributed",
+    "canonical_plans", "run_grid", "distributed_plans", "bfsdfs_plans",
+    "run_distributed",
 ]

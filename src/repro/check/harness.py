@@ -12,11 +12,13 @@ Strassen tree so every budget has a real recursion to count.
 
 :func:`distributed_plans` / :func:`run_distributed` are the multi-device
 half — the tile-parallel and rowshard schedules traced through
-``shard_map`` on the active mesh, compiled once (the
-``analysis.hlo.compiled_text`` path shared with the collective
-accounting), and checked against the packed/fused structural rules plus
-``collective-budget``. CI runs it inside the distributed-smoke job's
-8-fake-CPU-device subprocess.
+``shard_map`` on the active mesh, plus the BFS/DFS schedule
+(:func:`bfsdfs_plans` — planner-selected interleaving on a 2-axis
+(row, task) submesh) — compiled once (the ``analysis.hlo.compiled_text``
+path shared with the collective accounting), and checked against the
+packed/fused structural rules plus ``collective-budget`` (which holds
+BFS artifacts to the tighter one-chunk reduce-scatter budget). CI runs
+it inside the distributed-smoke job's 8-fake-CPU-device subprocess.
 """
 
 from __future__ import annotations
@@ -31,7 +33,8 @@ from repro.check import rules as _rules
 
 __all__ = [
     "CANONICAL_SHAPE", "DEFAULT_ALLOWLIST",
-    "canonical_plans", "run_grid", "distributed_plans", "run_distributed",
+    "canonical_plans", "run_grid", "distributed_plans", "bfsdfs_plans",
+    "run_distributed",
 ]
 
 # (m, n, k): rectangular; n_base forces L=2 on the ATA tree, L=1 on the
@@ -144,6 +147,30 @@ def distributed_plans(devices: int) -> List:
     return plans
 
 
+def bfsdfs_plans(devices: int, row_devices: int) -> List:
+    """BFS/DFS plans (dense + packed) for a (row, task) 2-axis mesh.
+
+    The interleaving is *planner-selected* — the top BFS-containing
+    candidate of ``cost.candidates`` for the harness shape and mesh — so
+    the artifact compiles exactly the schedule the front door would
+    dispatch, and the collective-budget rule gates its one-chunk
+    reduce-scatter payload.
+    """
+    from repro.tune import cost
+
+    m, n, nb_cut = _DIST_SHAPE["m"], _DIST_SHAPE["n"], _DIST_SHAPE["n_base"]
+    plans = []
+    for out in ("dense", "packed"):
+        cands = cost.candidates("ata", m, n, out=out, devices=devices,
+                                row_devices=row_devices)
+        top_b = next(
+            (p for p in cands if p.comm_schedule and "B" in p.comm_schedule),
+            None)
+        if top_b is not None:
+            plans.append(dataclasses.replace(top_b, n_base=nb_cut))
+    return plans
+
+
 def _trace_distributed(plan, mesh, schedule: str, *, m_global=None) -> Artifact:
     """Trace + compile one distributed schedule into an Artifact.
 
@@ -161,6 +188,14 @@ def _trace_distributed(plan, mesh, schedule: str, *, m_global=None) -> Artifact:
         fn = jax.jit(functools.partial(
             ata_tile_parallel, mesh=mesh, task_axis="model",
             n_base=plan.n_base, nb=plan.nb, out=plan.out))
+    elif schedule == "bfsdfs":
+        from repro.core.distributed import ata_bfs_dfs
+
+        fn = jax.jit(functools.partial(
+            ata_bfs_dfs, mesh=mesh, task_axis="model",
+            row_axis=("data" if "data" in mesh.shape else None),
+            interleaving=plan.comm_schedule, n_base=plan.n_base,
+            nb=plan.nb, packed_block=plan.packed_block, out=plan.out))
     else:
         from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
@@ -215,6 +250,26 @@ def run_distributed(*, mesh=None,
                       flush=True)
             art = _trace_distributed(plan_r, mesh, schedule,
                                      m_global=plan.m)
+            _rules.run(art, rules=_DIST_RULES, allowlist=report.allowlist,
+                       report=report)
+    # BFS/DFS artifacts on a 2-axis (row, task) submesh of the same
+    # devices: the planner-selected interleaving, gated by the tighter
+    # one-chunk scatter budget of the collective-budget rule. The row
+    # axis is 4 so the per-device slab (m/4 = 256 rows) stays
+    # distinguishable from the (n, n) square the no-dense-square rule
+    # hunts (a 2-way split of the 1024×512 harness shape would make the
+    # operand slab square).
+    if p >= 4 and p % 4 == 0:
+        import numpy as np
+        from jax.sharding import Mesh
+
+        mesh2 = Mesh(
+            np.asarray(mesh.devices).reshape(4, p // 4), ("data", "model"))
+        for plan in bfsdfs_plans(p // 4, 4):
+            if verbose:
+                print(f"  tracing bfsdfs:{plan_label(plan)}", flush=True)
+            art = _trace_distributed(plan, mesh2, "bfsdfs",
+                                     m_global=_DIST_SHAPE["m"])
             _rules.run(art, rules=_DIST_RULES, allowlist=report.allowlist,
                        report=report)
     return report

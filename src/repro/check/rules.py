@@ -28,7 +28,9 @@ module docstrings of ``core.ata`` / ``core.strassen`` / ``solve``):
                       dimension, never through vmap.
 ``collective-budget`` reduction-collective bytes (all-reduce +
                       reduce-scatter, per device) stay within the
-                      ``cost.retrieval_bytes`` payload the planner prices.
+                      ``cost.retrieval_bytes`` payload the planner prices;
+                      BFS-containing plans get the tighter one-chunk
+                      reduce-scatter budget (``ceil(T/P)·w²``).
 ================== ========================================================
 
 Override keys (``Artifact.overrides``) let plan-less call sites pin rule
@@ -456,8 +458,14 @@ def collective_budget(art: Artifact) -> List[Finding]:
     payload (all-reduce + reduce-scatter) is bounded by
     ``cost.retrieval_bytes(out, nb, w)`` (measured exact for rowshard,
     ≲0.8× for the tile schedule; operand movement rides collective-permute
-    / all-gather and is priced separately). Needs compiled HLO text and a
-    plan with ``devices > 1`` and a resolved ``nb``/``tile_w``. Overrides:
+    / all-gather and is priced separately). A BFS-containing
+    ``comm_schedule`` gets the far tighter scatter budget: the tri-direct
+    reduce-scatter's whole reduction payload is ONE ``T_pad/P``-tile chunk
+    per device (``ceil(T/P)·w²`` — the CAPS bandwidth saving the schedule
+    exists for), so a BFS artifact whose reduction bytes regress to the
+    psum schedule's full-stack payload fails the rule even though it would
+    pass the psum budget. Needs compiled HLO text and a plan with a
+    multi-device pool and a resolved ``nb``/``tile_w``. Overrides:
     ``collective_budget_bytes``, ``collective_slack`` (default 1.0).
     """
     from repro.analysis.hlo import collective_bytes
@@ -468,11 +476,21 @@ def collective_budget(art: Artifact) -> List[Finding]:
         return []
     budget = art.overrides.get("collective_budget_bytes")
     if budget is None:
-        if (plan is None or plan.devices <= 1
-                or plan.nb is None or plan.tile_w is None):
+        if plan is None or plan.nb is None or plan.tile_w is None:
             return []
-        budget = cost.retrieval_bytes(
-            plan.out, plan.nb, plan.tile_w, _itemsize(plan.dtype))
+        pool = plan.devices * max(getattr(plan, "row_devices", 1), 1)
+        if pool <= 1:
+            return []
+        cs = getattr(plan, "comm_schedule", None)
+        if cs and "B" in cs:
+            t_total = plan.nb * (plan.nb + 1) // 2
+            budget = (
+                -(-t_total // pool) * plan.tile_w * plan.tile_w
+                * _itemsize(plan.dtype)
+            )
+        else:
+            budget = cost.retrieval_bytes(
+                plan.out, plan.nb, plan.tile_w, _itemsize(plan.dtype))
     slack = art.overrides.get("collective_slack", 1.0)
     by_kind = collective_bytes(art.hlo_text)
     reduction = by_kind["all-reduce"] + by_kind["reduce-scatter"]

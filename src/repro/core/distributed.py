@@ -61,11 +61,13 @@ from repro import obs
 from repro.compat import shard_map
 from repro.core.ata import ata
 from repro.core.strassen import strassen_tn
-from repro.core.symmetric import SymmetricMatrix
+from repro.core.symmetric import SymmetricMatrix, sym_tile
 
 __all__ = [
     "gram_rowshard",
     "ata_tile_parallel",
+    "ata_bfs_dfs",
+    "bfs_dfs_assignment",
     "gemm_tn_colshard",
     "choose_tiling",
     "tile_parallel_device_flops",
@@ -354,6 +356,383 @@ def ata_tile_parallel(
     # per-tile dynamic_update_slice loop into a replicated (n_pad, n_pad)
     # square is gone from both modes.
     sym = SymmetricMatrix.from_tile_stack(tiles, n, nb=nb, packed_block=packed_block)
+    if alpha != 1.0:
+        sym = sym.scale(alpha)
+    if out == "packed":
+        return sym
+    return sym.to_dense()
+
+
+# ---------------------------------------------------------------------------
+# CAPS-style BFS/DFS schedule (paper §5 / Prop. 4.2 × CAPS, arxiv 1202.3173)
+# ---------------------------------------------------------------------------
+
+
+def _region_tiles(region) -> list:
+    """Stripe-index (i, j) tiles of one schedule region (lower triangle)."""
+    if region[0] == "tri":
+        _, lo, hi = region
+        return [(i, j) for i in range(lo, hi) for j in range(lo, i + 1)]
+    _, rlo, rhi, clo, chi = region
+    return [(i, j) for i in range(rlo, rhi) for j in range(clo, chi)]
+
+
+def _region_children(region):
+    """One recursion level of the ATA tree in tile space, or None at a leaf.
+
+    A diagonal (triangular) region splits as the paper's ATA recursion:
+    ``C11`` (triangle, ceil-half), ``C21`` (the off-diagonal rectangle — the
+    two Strassen products of the 4+3 diag/off-diag split), ``C22``
+    (triangle). A rectangular region splits 2×2 (its products are plain
+    Strassen gemms whose 7-way tree lives *inside* each tile's
+    ``strassen_tn`` leaf, below tile granularity).
+    """
+    if region[0] == "tri":
+        _, lo, hi = region
+        if hi - lo < 2:
+            return None
+        mid = lo + (hi - lo + 1) // 2
+        return [("tri", lo, mid), ("rect", mid, hi, lo, mid),
+                ("tri", mid, hi)]
+    _, rlo, rhi, clo, chi = region
+    if rhi - rlo < 2 and chi - clo < 2:
+        return None
+    rows = [(rlo, rhi)] if rhi - rlo < 2 else [
+        (rlo, rlo + (rhi - rlo + 1) // 2), (rlo + (rhi - rlo + 1) // 2, rhi)]
+    cols = [(clo, chi)] if chi - clo < 2 else [
+        (clo, clo + (chi - clo + 1) // 2), (clo + (chi - clo + 1) // 2, chi)]
+    return [("rect", a, b, c, d) for a, b in rows for c, d in cols]
+
+
+def bfs_dfs_assignment(nb: int, pool: int, interleaving: str,
+                       *, emit_spans: bool = False):
+    """Static BFS/DFS tile ownership over a ``pool``-device task axis.
+
+    The **interleaving-string contract**: ``interleaving`` is a string over
+    ``{'B', 'D'}``; character ℓ tags recursion level ℓ of the ATA tree
+    *in tile space* (level 0 = the root split of the ``nb``-stripe lower
+    triangle). A ``'B'`` (breadth-first, CAPS-style) level splits every
+    active device group into disjoint subgroups, one per child subproblem
+    (diag/off-diag: two triangles + the C21 rectangle; rectangles split
+    2×2), with devices allotted proportionally to child tile counts
+    (largest remainder, every nonempty child ≥ 1 device while they last;
+    with fewer devices than children, children are LPT-packed onto the
+    devices). A ``'D'`` (depth-first) level keeps each group intact — its
+    devices sweep that level's subproblems cooperatively. Groups of one
+    device, and regions at tile granularity, pass through unchanged, so
+    any device count (7-divisible or not) and any string length are valid.
+    After the last character each group's tiles are assigned contiguously
+    (tri-order) to its devices — a pure-``'D'`` string therefore
+    reproduces :func:`ata_tile_parallel`'s contiguous split exactly.
+
+    Returns ``(owned, levels)``: ``owned[dev]`` is the sorted list of
+    global tri-order tile ids device ``dev`` computes; ``levels`` is one
+    ``{'tag', 'groups'}`` dict per interleaving character (telemetry —
+    with ``emit_spans`` each level's split is wrapped in a
+    ``distributed.bfs`` / ``distributed.dfs`` obs span).
+    """
+    if not interleaving or any(c not in "BD" for c in interleaving):
+        raise ValueError(
+            f"interleaving must be a non-empty string over {{'B','D'}}; "
+            f"got {interleaving!r}")
+    groups = [([("tri", 0, nb)], list(range(pool)))]
+    levels = []
+
+    def split_level(lv: int) -> None:
+        nonlocal groups
+        new_groups = []
+        for regions, devs in groups:
+            if len(devs) < 2:
+                new_groups.append((regions, devs))
+                continue
+            kids = []
+            for r in regions:
+                ch = _region_children(r)
+                kids.extend(ch if ch else [r])
+            kids = [(k, len(_region_tiles(k))) for k in kids]
+            kids = [(k, c) for k, c in kids if c]
+            if len(kids) < 2:
+                new_groups.append(([k for k, _ in kids], devs))
+                continue
+            g = len(devs)
+            if g >= len(kids):
+                total = sum(c for _, c in kids)
+                quota = [c * g / total for _, c in kids]
+                alloc = [max(1, int(q)) for q in quota]
+                while sum(alloc) > g:
+                    over = [i for i in range(len(alloc)) if alloc[i] > 1]
+                    i = max(over, key=lambda i: alloc[i] - quota[i])
+                    alloc[i] -= 1
+                while sum(alloc) < g:
+                    i = min(range(len(alloc)),
+                            key=lambda i: (alloc[i] - quota[i], -quota[i]))
+                    alloc[i] += 1
+                pos = 0
+                for (k, _), a in zip(kids, alloc):
+                    new_groups.append(([k], devs[pos:pos + a]))
+                    pos += a
+            else:
+                buckets = [[[], 0] for _ in range(g)]
+                for k, c in sorted(kids, key=lambda kc: -kc[1]):
+                    b = min(buckets, key=lambda b: b[1])
+                    b[0].append(k)
+                    b[1] += c
+                new_groups.extend(
+                    (regs, [dev]) for (regs, _), dev in zip(buckets, devs))
+        groups = new_groups
+
+    for lv, ch in enumerate(interleaving):
+        if ch == "B":
+            if emit_spans:
+                with obs.span("distributed.bfs", level=lv):
+                    split_level(lv)
+            else:
+                split_level(lv)
+        elif emit_spans:
+            with obs.span("distributed.dfs", level=lv, groups=len(groups)):
+                pass
+        levels.append(dict(tag=ch, groups=len(groups)))
+
+    owned = [[] for _ in range(pool)]
+    for regions, devs in groups:
+        ts = sorted(i * (i + 1) // 2 + j
+                    for r in regions for i, j in _region_tiles(r))
+        per = -(-len(ts) // len(devs))
+        for idx, dev in enumerate(devs):
+            owned[dev] = ts[idx * per:(idx + 1) * per]
+    return owned, levels
+
+
+def ata_bfs_dfs(
+    a: jax.Array,
+    mesh: Mesh,
+    *,
+    task_axis: str = "model",
+    row_axis: Optional[str] = None,
+    interleaving: Optional[str] = None,
+    alpha: float = 1.0,
+    plan=None,
+    n_base: Optional[int] = None,
+    variant: Optional[str] = None,
+    leaf_dispatch: Optional[str] = None,
+    use_strassen: bool = True,
+    nb: Optional[int] = None,
+    out: str = "dense",
+    packed_block: Optional[int] = None,
+    acc_dtype=jnp.float32,
+) -> Union[jax.Array, SymmetricMatrix]:
+    """Distributed ``C = alpha·AᵀA`` under a CAPS-style BFS/DFS schedule.
+
+    The ATA analogue of CAPS (Ballard–Demmel–Holtz–Schwartz, arxiv
+    1202.3173): each recursion level of the lower-triangle tile tree is
+    tagged BFS (``'B'``) or DFS (``'D'``) by ``interleaving`` (contract:
+    see :func:`bfs_dfs_assignment` — e.g. ``"BD"``). BFS levels confine
+    each child subproblem (4 sub-ATAs + the C21 Strassen rectangle — the
+    diag/off-diag 4+3 split) to a disjoint device subgroup of the task
+    axis, so subgroup collectives run on sub-axes of the mesh and never
+    cross subgroups; DFS levels keep all of a group's devices cooperating
+    on one subproblem, exactly like :func:`ata_tile_parallel`'s contiguous
+    sweep. Leaf tiles dispatch through the planned sequential machinery
+    (``strassen_tn`` with the plan's unrolled/batched/fused leaf body),
+    and retrieval is the packed ``SymmetricMatrix`` stack at the root.
+
+    Communication: any BFS level switches the root exchange to the
+    **tri-direct reduce-scatter** — every device stages its partial tiles
+    at their global tri positions in a ``T``-padded buffer and one
+    ``psum_scatter`` over the merged ``(task, row)`` axes simultaneously
+    (a) sums the row-wise partials and (b) deals each device a contiguous
+    tri-order chunk of the reduced stack, so the packed retrieval is a
+    pure slice and diagonal symmetrization happens locally on the chunk
+    (``from_tile_stack(presymmetrized=True)`` skips its cross-shard diag
+    gather). The collective payload is one chunk of ``T_pad/(p·d)`` tiles
+    per device — versus the psum schedule's full ``t_per``-tile
+    all-reduce *plus* an ``nb``-tile diag-gather — at the price of the
+    ``T``-tile staging buffer: the classic CAPS memory-for-bandwidth
+    trade (BFS = more memory, fewer words; DFS = lean memory, more
+    words). A pure-``'D'`` interleaving degenerates to the existing
+    schedule — same contiguous assignment, same plain ``psum``, same
+    out_specs, bitwise-identical program. Every interleaving is
+    value-identical: tile products and their reduction order never depend
+    on the tags (the scatter only adds zeros, which is bitwise-neutral),
+    so results match :func:`ata_tile_parallel` bitwise in both output
+    modes.
+
+    ``interleaving=None`` resolves through the planner
+    (``plan.comm_schedule`` — picked per shape/mesh/memory by the α-β
+    communication model of ``tune.cost``), falling back to pure DFS.
+    Other arguments match :func:`ata_tile_parallel`.
+    """
+    if out not in ("dense", "packed"):
+        raise ValueError(f"unknown output mode {out!r}; use 'dense' or 'packed'")
+    m, n = a.shape
+    p_task = mesh.shape[task_axis]
+    d_row = mesh.shape[row_axis] if row_axis is not None else 1
+    if row_axis is not None and m % d_row:
+        raise ValueError(
+            f"row_axis {row_axis!r} size {d_row} must divide m={m} "
+            f"(A is row-sharded P({row_axis!r}, None))"
+        )
+    if plan is None and n_base is None and variant is None and nb is None \
+            and interleaving is None:
+        from repro.tune import plan as _plan_fn
+
+        plan = _plan_fn(
+            op="ata", m=m, n=n, dtype=str(a.dtype), devices=p_task, out=out,
+            row_devices=d_row,
+        )
+    w = None
+    if plan is not None:
+        n_base = plan.n_base if n_base is None else n_base
+        variant = plan.variant if variant is None else variant
+        if leaf_dispatch is None:
+            leaf_dispatch = getattr(plan, "leaf_dispatch", None)
+        if packed_block is None:
+            packed_block = plan.packed_block
+        if interleaving is None:
+            interleaving = getattr(plan, "comm_schedule", None)
+        if plan.algorithm == "dense":
+            use_strassen = False
+        if nb is None and plan.devices == p_task and plan.n == n and plan.nb \
+                and getattr(plan, "row_devices", 1) == d_row:
+            nb, w = plan.nb, plan.tile_w
+    if interleaving is None:
+        interleaving = "D"
+    if nb is None:
+        if "B" in interleaving and p_task * d_row > 1:
+            # BFS tiling: T must divide the merged device pool so the
+            # tri-direct reduce-scatter chunks exactly and the packed
+            # retrieval is an identity slice (see tune.cost.bfs_tiling)
+            from repro.tune.cost import bfs_tiling
+
+            nb, w = bfs_tiling(n, p_task * d_row, devices=p_task, out=out,
+                               packed_block=packed_block)
+            if packed_block is None:
+                packed_block = w
+        else:
+            nb, w = choose_tiling(n, p_task, out=out,
+                                  packed_block=packed_block)
+    elif w is None:
+        w = -(-n // nb)
+        w = -(-w // 8) * 8
+    n_pad = nb * w
+    t_total = nb * (nb + 1) // 2
+
+    owned, levels = bfs_dfs_assignment(nb, p_task, interleaving,
+                                       emit_spans=True)
+    pool = p_task * d_row
+    scatter = "B" in interleaving and pool > 1
+    s_eff = max(len(o) for o in owned)
+    # tri-direct staging: pad T to a multiple of the device pool so one
+    # reduce-scatter over the merged (task, row) axes lands every device a
+    # contiguous tri-order chunk of the fully reduced stack
+    t_pad = -(-t_total // pool) * pool
+    chunk = t_pad // pool
+    # the static slot table the per-device body indexes with its own
+    # axis_index: slot_table[dev][q] = global tri-order tile id, -1 = dummy
+    import numpy as _np
+
+    slot_table = _np.full((p_task, s_eff), -1, dtype=_np.int32)
+    for dev, ts in enumerate(owned):
+        slot_table[dev, : len(ts)] = ts
+    all_valid = (slot_table >= 0).all(axis=0)  # per-slot: cond-free?
+    diag_mask = _np.zeros(t_pad, dtype=bool)
+    for i in range(nb):
+        diag_mask[i * (i + 1) // 2 + i] = True
+
+    if n_pad > n:
+        a = jnp.pad(a, ((0, 0), (0, n_pad - n)))
+
+    def compute_tile(a_local, t):
+        i, j = _tri_coords_traced(t)
+        ai = jax.lax.dynamic_slice_in_dim(a_local, i * w, w, axis=1)
+        aj = jax.lax.dynamic_slice_in_dim(a_local, j * w, w, axis=1)
+        if use_strassen:
+            return strassen_tn(
+                ai, aj, n_base=n_base, variant=variant,
+                leaf_dispatch=leaf_dispatch, acc_dtype=acc_dtype,
+            )
+        return jax.lax.dot_general(
+            ai, aj, (((0,), (0,)), ((), ())),
+            preferred_element_type=acc_dtype,
+        )
+
+    m_local = m // d_row
+    tile_abs = jax.eval_shape(
+        compute_tile,
+        jax.ShapeDtypeStruct((m_local, n_pad), a.dtype),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+    obs.metrics.inc("dispatch.ata_bfs_dfs")
+    obs.metrics.inc("ata_bfs_dfs.tiles", t_total)
+    obs.metrics.inc("ata_bfs_dfs.bfs_levels", interleaving.count("B"))
+    obs.metrics.inc("ata_bfs_dfs.dfs_levels", interleaving.count("D"))
+
+    table = jnp.asarray(slot_table)
+    diag_tbl = jnp.asarray(diag_mask)
+    from repro.launch.mesh import merged_axis
+
+    merged = merged_axis(task_axis, row_axis)
+
+    def local_fn(a_local):
+        pidx = jax.lax.axis_index(task_axis)
+        row = jax.lax.dynamic_slice_in_dim(table, pidx, 1, axis=0)[0]
+
+        def tile_slot(q):
+            g = row[q]
+            if all_valid[q]:
+                return compute_tile(a_local, g)
+            return jax.lax.cond(
+                g >= 0,
+                lambda: compute_tile(a_local, jnp.maximum(g, 0)),
+                lambda: jnp.zeros(tile_abs.shape, tile_abs.dtype),
+            )
+
+        with obs.span("distributed.tile_body", t_per=s_eff, w=w):
+            tiles = jnp.stack([tile_slot(q) for q in range(s_eff)])
+        if scatter:
+            # BFS redistribution, tri-direct: stage the partial tiles at
+            # their global tri positions in a T-padded buffer (one extra
+            # sacrificial row swallows the dummy slots), then ONE
+            # reduce-scatter over the merged (task, row) axes both sums
+            # the row-wise partials and deals every device its contiguous
+            # tri-order chunk of the reduced stack — reduction and
+            # retrieval re-layout in a single chunk-sized collective.
+            ids = jnp.where(row >= 0, row, t_pad)
+            buf = jnp.zeros((t_pad + 1, *tiles.shape[1:]), tiles.dtype)
+            buf = buf.at[ids].set(tiles)[:t_pad]
+            with obs.span("distributed.psum_scatter", axis=str(merged),
+                          out="packed"):
+                tiles = jax.lax.psum_scatter(
+                    buf, merged, scatter_dimension=0, tiled=True)
+            # local diagonal symmetrization: the chunk's global tile ids
+            # are axis_index-affine, so diag membership is a tiny static
+            # table lookup — from_tile_stack can then skip its cross-shard
+            # _symmetrize_diag gather (presymmetrized=True).
+            k = jax.lax.axis_index(task_axis)
+            if row_axis is not None:
+                k = k * d_row + jax.lax.axis_index(row_axis)
+            dm = jnp.take(diag_tbl, k * chunk + jnp.arange(chunk))
+            tiles = jnp.where(dm[:, None, None], sym_tile(tiles), tiles)
+        elif row_axis is not None:
+            with obs.span("distributed.psum", axis=row_axis,
+                          out="packed"):
+                tiles = jax.lax.psum(tiles, row_axis)
+        return tiles
+
+    in_spec = P(row_axis, None) if row_axis else P(None, None)
+    out_spec = (P(merged, None, None) if scatter
+                else P(task_axis, None, None))
+    tiles = shard_map(
+        local_fn, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec
+    )(a)
+    # either way the global stack is the tri-order prefix: scatter path by
+    # construction (chunk k holds tiles [k·chunk, (k+1)·chunk)), psum path
+    # because contiguous per-task assignment puts task t's tiles at
+    # [t·s_eff, …) with dummies trailing — retrieval is a pure slice.
+    sym = SymmetricMatrix.from_tile_stack(tiles, n, nb=nb,
+                                          packed_block=packed_block,
+                                          presymmetrized=scatter)
     if alpha != 1.0:
         sym = sym.scale(alpha)
     if out == "packed":

@@ -227,9 +227,20 @@ class SymmetricMatrix:
         return cls(fn(lower), n, bn)
 
     @classmethod
-    def from_tile_stack(cls, tiles, n: int, *, nb: int, packed_block=None):
+    def from_tile_stack(cls, tiles, n: int, *, nb: int, packed_block=None,
+                        presymmetrized: bool = False):
         """Assemble from a tri-enumerated ``(..., S, w, w)`` lower-triangle
         tile stack — the SPMD schedules' psum'd payload (paper Prop. 4.2).
+
+        ``presymmetrized=True`` asserts the producer already applied
+        :func:`sym_tile` to every diagonal tile (e.g. the BFS/DFS schedule
+        symmetrizes locally after its reduce-scatter, where slot→tile
+        membership is static), so the aligned path can skip
+        ``_symmetrize_diag`` — on a sharded stack that gather is a whole
+        cross-device collective. Only the aligned path honours the flag:
+        the repack path's packed-grid diagonal blocks mix pieces of several
+        stripe tiles and must be re-symmetrized regardless (``sym_tile`` is
+        idempotent, so presymmetrized inputs stay bitwise-correct there).
 
         ``tiles`` covers an ``nb``-stripe grid of width ``w =
         tiles.shape[-1]`` under the same row-major enumeration this storage
@@ -270,7 +281,8 @@ class SymmetricMatrix:
         t_pack = nb_pack * (nb_pack + 1) // 2
         if w == bn:
             # prefix-closed enumeration: stack[:T_pack] IS the packed storage
-            return cls(tiles[..., :t_pack, :, :], n, bn)._symmetrize_diag()
+            packed = cls(tiles[..., :t_pack, :, :], n, bn)
+            return packed if presymmetrized else packed._symmetrize_diag()
         # repack: re-tile every stripe tile onto the bn grid
         n_pad = nb_pack * bn
         batch = tiles.shape[:-3]

@@ -49,9 +49,16 @@ def plan_label(plan) -> str:
     """Compact human-stable identity of one dispatch configuration — the
     calibration key. Deliberately *not* the cache key: no jax version, no
     dtype-tail noise; rows from different processes of one machine profile
-    aggregate."""
+    aggregate. Distributed plans append the mesh pool and the interleaving
+    (the comm_schedule axis changes the compiled program — a BFS plan and
+    a psum plan at one shape must not aggregate into one drift row)."""
     shape = f"{plan.m}x{plan.n}" + (f"x{plan.k}" if plan.k != plan.n else "")
     tail = f"|{plan.method}" if plan.method else f"|{plan.leaf_dispatch}"
+    devices = getattr(plan, "devices", 1)
+    row_devices = getattr(plan, "row_devices", 1)
+    if devices * row_devices > 1:
+        cs = getattr(plan, "comm_schedule", None)
+        tail += f"|P={devices}x{row_devices}|cs={cs or 'psum'}"
     return (
         f"{plan.op}|{shape}|b={plan.batch}|{plan.algorithm}"
         f"|nb={plan.n_base}{tail}"

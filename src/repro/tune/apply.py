@@ -21,6 +21,7 @@ __all__ = [
     "fused_fns",
     "build_callable",
     "ata_with_plan",
+    "ata_distributed_with_plan",
     "gemm_tn_with_plan",
     "lstsq_with_plan",
 ]
@@ -69,6 +70,34 @@ def ata_with_plan(a, plan: cost.Plan, **kw):
 
     fn = ata_batched if plan.batch else ata
     return fn(a, plan=plan, out=plan.out, **kw)
+
+
+def ata_distributed_with_plan(
+    a, mesh, plan: cost.Plan, *, task_axis: str = "model",
+    row_axis=None, **kw,
+):
+    """Distributed ATA dispatched exactly as the plan says.
+
+    The ``comm_schedule`` axis picks the SPMD schedule itself: a
+    BFS-containing interleaving runs :func:`~repro.core.distributed.
+    ata_bfs_dfs` (tri-direct reduce-scatter over the merged device pool);
+    ``None`` or a pure-``'D'`` string runs the owner-computes psum
+    schedule (:func:`~repro.core.distributed.ata_tile_parallel` — which a
+    pure-``'D'`` ``ata_bfs_dfs`` degenerates to bitwise anyway, so the
+    front door dispatches both to the same compiled program family).
+    """
+    from repro.core.distributed import ata_bfs_dfs, ata_tile_parallel
+
+    cs = getattr(plan, "comm_schedule", None)
+    if cs and "B" in cs:
+        return ata_bfs_dfs(
+            a, mesh, task_axis=task_axis, row_axis=row_axis, plan=plan,
+            interleaving=cs, out=plan.out, **kw,
+        )
+    return ata_tile_parallel(
+        a, mesh, task_axis=task_axis, row_axis=row_axis, plan=plan,
+        out=plan.out, **kw,
+    )
 
 
 def gemm_tn_with_plan(a, b, plan: cost.Plan, **kw):

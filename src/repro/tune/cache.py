@@ -75,21 +75,33 @@ def cache_stats() -> dict:
 
 _MEMO: dict = {}
 _LOCK = threading.Lock()
-# v3: `leaf_dispatch` gained the 'fused' value (fused-operand leaf
-# kernels). v2 introduced op='solve' and the `method` field. Older-schema
-# ("v1|…"/"v2|…") cache files still load: old entries deserialize (missing
-# fields default) and their keys are migrated to the current prefix on
-# load — key layout is otherwise unchanged, so old measured plans keep
-# serving. Symmetrically, entries written by a *newer* schema may carry
-# leaf_dispatch values this revision has never heard of: those are
-# sanitized to 'unrolled' (always valid, bitwise-identical output) instead
-# of raising at every planned dispatch.
-_SCHEMA = "v3"
-_COMPAT_SCHEMAS = ("v1", "v2")
+# v4: the distributed branch gained the `row_devices` key segment
+# (``r=<row axis size>``, inserted before ``jax=``) and Plans gained
+# `comm_schedule` (the BFS/DFS interleaving string). v3 added the 'fused'
+# leaf_dispatch; v2 introduced op='solve' and the `method` field.
+# Older-schema ("v1|…".."v3|…") cache files still load: old entries
+# deserialize (missing fields default to the psum schedule they were
+# measured with) and their keys are migrated on load — prefix swapped and
+# the ``r=1`` segment inserted — so old measured plans keep serving.
+# Symmetrically, entries written by a *newer* schema may carry
+# leaf_dispatch or comm_schedule values this revision has never heard of:
+# leaf_dispatch sanitizes to 'unrolled', comm_schedule to None (the psum
+# schedule — always valid, bitwise-identical output) instead of raising
+# at every planned dispatch.
+_SCHEMA = "v4"
+_COMPAT_SCHEMAS = ("v1", "v2", "v3")
 
 # every leaf_dispatch this revision's recursions accept (mirrors
 # core.strassen.resolve_tunables; kept literal so load never imports jax)
 _KNOWN_LEAF_DISPATCHES = ("unrolled", "batched", "fused")
+
+
+def _valid_comm_schedule(cs) -> bool:
+    """True iff ``cs`` is a value this revision's schedules accept: None
+    (psum) or a non-empty {'B','D'} string (bfs_dfs_assignment's contract)."""
+    return cs is None or (
+        isinstance(cs, str) and bool(cs) and all(c in "BD" for c in cs)
+    )
 
 
 def cache_path() -> str:
@@ -111,11 +123,17 @@ def plan_key(
     out: str,
     backend: str,
     devices: int = 1,
+    row_devices: int = 1,
 ) -> str:
-    """The cache key: problem identity + runtime identity (jax version)."""
+    """The cache key: problem identity + runtime identity (jax version).
+
+    ``row_devices`` (the reduction-axis size of the two-level distributed
+    mesh) joined the key in schema v4 — the BFS/DFS interleaving choice
+    depends on it; pre-v4 keys migrate with ``r=1`` on load.
+    """
     return (
         f"{_SCHEMA}|{op}|m={m}|n={n}|k={k}|b={batch}|{dtype}|{out}"
-        f"|{backend}|p={devices}|jax={jax.__version__}"
+        f"|{backend}|p={devices}|r={row_devices}|jax={jax.__version__}"
     )
 
 
@@ -142,10 +160,14 @@ def load_cache(path: Optional[str] = None) -> dict:
     skipped = 0
     for key, d in raw.get("plans", {}).items():
         for old in _COMPAT_SCHEMAS:
-            # older-schema keys whose layout is otherwise unchanged are
-            # migrated in place, so pre-bump measured plans keep serving
+            # older-schema keys are migrated in place, so pre-bump measured
+            # plans keep serving: prefix swapped to the current schema and
+            # (pre-v4 layouts) the row-devices segment inserted with its
+            # single-possible historical value.
             if key.startswith(old + "|"):
                 key = _SCHEMA + key[len(old):]
+                if "|r=" not in key and "|jax=" in key:
+                    key = key.replace("|jax=", "|r=1|jax=", 1)
                 metrics.inc("tune.cache.migrated")
                 break
         try:
@@ -164,6 +186,15 @@ def load_cache(path: Optional[str] = None) -> dict:
             import dataclasses
 
             p = dataclasses.replace(p, leaf_dispatch="unrolled")
+            metrics.inc("tune.cache.sanitized")
+        if not _valid_comm_schedule(p.comm_schedule):
+            # same policy for a future schema's interleaving value: the
+            # psum schedule (comm_schedule=None) is always valid and
+            # bitwise-identical, so the entry keeps serving instead of
+            # bfs_dfs_assignment raising on every planned dispatch.
+            import dataclasses
+
+            p = dataclasses.replace(p, comm_schedule=None)
             metrics.inc("tune.cache.sanitized")
         out[key] = p
     if skipped:
@@ -206,6 +237,7 @@ def plan(
     out: str = "dense",
     backend: Optional[str] = None,
     devices: int = 1,
+    row_devices: int = 1,
     autotune: bool = False,
     cache_file: Optional[str] = None,
 ) -> cost.Plan:
@@ -224,6 +256,10 @@ def plan(
       devices: task-axis size for the distributed schedules (fills the
         plan's ``nb``/``tile_w`` stripe tiling — the planner's distributed
         branch).
+      row_devices: row (reduction) axis size of the two-level distributed
+        mesh — with ``devices > 1`` the planner prices the BFS/DFS
+        interleaving candidates against it (α-β communication model +
+        per-device memory budget) and fills ``plan.comm_schedule``.
       autotune: measure candidates instead of trusting the analytic model;
         the winner persists to the JSON cache for future processes.
         Single-device only — with ``devices > 1`` the plan stays analytic
@@ -242,7 +278,8 @@ def plan(
                          f"got batch={batch}")
     backend = backend or jax.default_backend()
     k = n if k is None else k
-    key = plan_key(op, m, n, k, batch, dtype, out, backend, devices)
+    key = plan_key(op, m, n, k, batch, dtype, out, backend, devices,
+                   row_devices)
     memo_key = (key, cache_file, autotune)
 
     with _LOCK:
@@ -277,7 +314,7 @@ def plan(
         metrics.inc("tune.cache.miss")
         resolved = cost.analytic_plan(
             op, m, n, k, batch=batch, dtype=dtype, out=out,
-            backend=backend, devices=devices,
+            backend=backend, devices=devices, row_devices=row_devices,
         )
 
     with _LOCK:

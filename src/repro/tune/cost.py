@@ -89,12 +89,18 @@ __all__ = [
     "machine_for",
     "predict_seconds",
     "retrieval_bytes",
+    "comm_levels",
+    "comm_seconds",
+    "comm_memory_bytes",
+    "comm_schedule_candidates",
+    "choose_comm_schedule",
     "dispatch_calls",
     "solve_dispatch_calls",
     "candidates",
     "analytic_plan",
     "default_plan",
     "distributed_tiling",
+    "bfs_tiling",
 ]
 
 _ITEMSIZE = {"float32": 4, "bfloat16": 2, "float16": 2, "float64": 8}
@@ -146,6 +152,14 @@ class Plan:
     devices: int = 1             # distributed branch: task-axis size
     nb: Optional[int] = None     # distributed stripe count (devices > 1)
     tile_w: Optional[int] = None  # distributed stripe width (devices > 1)
+    # distributed branch, devices > 1 only: row (reduction) axis size of
+    # the two-level ATA-D mesh, and the BFS/DFS interleaving string of the
+    # CAPS-style schedule ('B'/'D' per recursion level — the contract of
+    # core.distributed.bfs_dfs_assignment). None = the plain-psum schedule
+    # (ata_tile_parallel); pre-v4 cache entries deserialize to exactly
+    # that, which is what they were measured with.
+    row_devices: int = 1
+    comm_schedule: Optional[str] = None
     source: str = "analytic"     # 'analytic' | 'measured' | 'cache' | 'default'
     predicted_s: Optional[float] = None
     measured_s: Optional[float] = None
@@ -200,6 +214,17 @@ class Machine:
     # overhead. This is the term the batched leaf dispatch exists to kill:
     # unrolled recursion pays it 7^L times, batched O(L) times.
     launch_overhead_s: float = 5e-6
+    # α-β collective model (distributed branch): per-message latency and
+    # per-byte transfer time of one collective step. α is what the psum
+    # schedule's single all-reduce amortizes and the BFS scatter+gather
+    # pair pays twice; β is what the scattered retrieval halves. The cpu
+    # values are calibrated on the 8-fake-device container (see MACHINES).
+    alpha_s: float = 1e-6
+    beta_s_per_byte: float = 2.5e-11
+    # per-device memory budget the interleaving choice is priced against
+    # (CAPS's memory-vs-bandwidth rule): schedules whose per-device
+    # residency exceeds it are infeasible.
+    device_memory_bytes: float = 16e9
 
     def mxu_eff(self, d: int) -> float:
         d = max(int(d), 1)
@@ -214,6 +239,8 @@ def _tpu_machine() -> Machine:
     return Machine(
         "tpu", roofline.PEAK_FLOPS, roofline.HBM_BW, 128, True, 1.0,
         launch_overhead_s=1.5e-6,
+        # ICI-class interconnect: ~1 µs collective step, ~9e10 B/s per link
+        alpha_s=1e-6, beta_s_per_byte=1.1e-11, device_memory_bytes=16e9,
     )
 
 
@@ -234,11 +261,23 @@ MACHINES = {
     # above unrolled, inverting the measured order. Under this model the
     # argmin at the bench shapes matches the measured per-shape ranking:
     # dense < unrolled(L=1) < fused(L=1) < batched(L=1) < deep recursions.
+    # α-β terms calibrated on the 8-fake-device container via the
+    # obs.calibrate drift rows of the distributed sweep (fake devices
+    # share one memory): a collective "message" costs a thunk dispatch
+    # ≈ the 5e-5 launch floor; β from the same-compute psum-vs-scatter
+    # differential at the (1,8) rowshard mesh — Δ2.6 ms over Δ3.9 MB of
+    # collective payload ≈ 7e-10 s/B (fake-device "links" run at shared-
+    # memcpy-under-contention speed, ~1.4e9 B/s, not the 1e10 B/s a real
+    # socket-local memcpy would suggest).
     "cpu": lambda: Machine("cpu", 2.2e11, 2.0e10, 512, False, 1.5,
-                           stack_word_cost=5.5, launch_overhead_s=5e-5),
+                           stack_word_cost=5.5, launch_overhead_s=5e-5,
+                           alpha_s=5e-5, beta_s_per_byte=7e-10,
+                           device_memory_bytes=2e9),
     # A100-class default for completeness (untuned; autotune refines).
     "gpu": lambda: Machine("gpu", 1.56e14, 1.6e12, 128, False, 1.0,
-                           launch_overhead_s=8e-6),
+                           launch_overhead_s=8e-6,
+                           alpha_s=4e-6, beta_s_per_byte=4e-12,
+                           device_memory_bytes=8e10),
 }
 
 
@@ -441,6 +480,232 @@ def retrieval_bytes(
     return (nb * tile_w) ** 2 * itemsize
 
 
+# ---------------------------------------------------------------------------
+# α-β communication model of the BFS/DFS schedule (CAPS-style, paper §5)
+# ---------------------------------------------------------------------------
+
+
+def _bfs_makespan(nb: int, devices: int, comm_schedule: Optional[str]) -> int:
+    """Tiles on the busiest task device under the interleaving (== the
+    contiguous ``ceil(T/devices)`` for pure DFS / the psum schedule)."""
+    t_total = nb * (nb + 1) // 2
+    if not comm_schedule or "B" not in comm_schedule:
+        return -(-t_total // devices)
+    from repro.core.distributed import bfs_dfs_assignment
+
+    owned, _ = bfs_dfs_assignment(nb, devices, comm_schedule)
+    return max(len(o) for o in owned)
+
+
+def comm_levels(
+    comm_schedule: Optional[str],
+    nb: int,
+    tile_w: int,
+    devices: int,
+    row_devices: int = 1,
+    *,
+    out: str = "packed",
+    itemsize: int = 4,
+) -> list:
+    """Per-level (messages, words) attribution of one interleaving.
+
+    Two realized exchange patterns, priced with the standard
+    ring-collective α-β counts and attributed to the levels whose tag
+    induces them:
+
+    * any ``'B'`` level switches the whole root exchange to the
+      **tri-direct reduce-scatter**: one collective over the merged
+      ``P = devices·row_devices`` pool moves the ``T``-padded staging
+      stack ``S_pad = T_pad·w²`` — ``P−1`` steps, ``S_pad·(P−1)/P``
+      words — simultaneously reducing the row-wise partials and dealing
+      tri-order chunks, after which the packed retrieval is a pure slice
+      (no root gather). Attributed evenly to the ``'B'`` levels (the
+      redistribution is what BFS means); dense out adds the
+      ``T``-stack gather the mirrored-square assembly forces, at the
+      last level;
+    * a pure-``'D'`` string (or ``None`` — the psum schedule) pays the
+      **row-axis all-reduce** of the slot stack ``S = s_eff·w²``
+      (``2(d−1)`` steps, ``2·S·(d−1)/d`` words), attributed evenly to
+      the ``'D'`` levels, plus the **root gather** replicating the
+      packed result (dense adds the mirrored square) across the pool —
+      ``P−1`` steps, ``R·(P−1)/P`` words — and the **diag-symmetrization
+      gather**: ``from_tile_stack`` on the pool-sharded stack lowers
+      ``_symmetrize_diag``'s cross-shard diag-tile read as a masked
+      all-reduce (``P−1`` steps, ``nb·w²`` words — the term the scatter
+      schedule deletes by symmetrizing its chunk locally), both at the
+      last level.
+
+    Returned as one ``{'tag', 'msgs', 'words'}`` dict per level — the
+    per-level ``prop42_msgs``/``prop42_words`` columns of
+    ``bench_distributed``.
+    """
+    sched = comm_schedule or "D"
+    t_total = nb * (nb + 1) // 2
+    pool = devices * max(row_devices, 1)
+    scatter = "B" in sched and pool > 1
+    levels = [dict(tag=c, msgs=0.0, words=0.0) for c in sched]
+    if scatter:
+        t_pad = -(-t_total // pool) * pool
+        s_pad = t_pad * tile_w * tile_w
+        red_msgs, red_words = pool - 1, s_pad * (pool - 1) / pool
+        carriers = [lv for lv in levels if lv["tag"] == "B"]
+        for lv in carriers:
+            lv["msgs"] += red_msgs / len(carriers)
+            lv["words"] += red_words / len(carriers)
+        if out == "dense":
+            # to_dense gathers the chunked tri stack for the mirrored
+            # square on every device
+            levels[-1]["msgs"] += pool - 1
+            levels[-1]["words"] += s_pad * (pool - 1) / pool
+        return levels
+    s_max = _bfs_makespan(nb, devices, sched)
+    stack_words = s_max * tile_w * tile_w
+    d = max(row_devices, 1)
+    if d > 1:
+        red_msgs, red_words = 2 * (d - 1), 2 * stack_words * (d - 1) / d
+        carriers = [lv for lv in levels if lv["tag"] == "D"] or levels
+        for lv in carriers:
+            lv["msgs"] += red_msgs / len(carriers)
+            lv["words"] += red_words / len(carriers)
+    res_words = t_total * tile_w * tile_w
+    if out == "dense":
+        res_words += (nb * tile_w) ** 2
+    levels[-1]["msgs"] += pool - 1
+    levels[-1]["words"] += res_words * (pool - 1) / pool
+    if pool > 1:
+        # retrieval's _symmetrize_diag over the pool-sharded stack
+        levels[-1]["msgs"] += pool - 1
+        levels[-1]["words"] += nb * tile_w * tile_w
+    return levels
+
+
+def comm_seconds(
+    machine: Machine,
+    comm_schedule: Optional[str],
+    nb: int,
+    tile_w: int,
+    devices: int,
+    row_devices: int = 1,
+    *,
+    out: str = "packed",
+    itemsize: int = 4,
+) -> float:
+    """Total α-β time of one interleaving: ``Σ msgs·α + Σ bytes·β``."""
+    levels = comm_levels(comm_schedule, nb, tile_w, devices, row_devices,
+                         out=out, itemsize=itemsize)
+    msgs = sum(lv["msgs"] for lv in levels)
+    words = sum(lv["words"] for lv in levels)
+    return msgs * machine.alpha_s + words * itemsize * machine.beta_s_per_byte
+
+
+def comm_memory_bytes(
+    comm_schedule: Optional[str],
+    nb: int,
+    tile_w: int,
+    devices: int,
+    row_devices: int = 1,
+    *,
+    m: int,
+    out: str = "packed",
+    itemsize: int = 4,
+) -> int:
+    """Per-device residency of one interleaving (the CAPS memory side).
+
+    The textbook CAPS trade: a ``'B'`` level buys its bandwidth saving
+    with memory — every device stages its partial tiles in a **full
+    ``T``-padded tri-order buffer** (plus the operand slab, the local
+    partial stack, and the scattered ``T/P`` chunk it keeps); a
+    pure-``'D'`` string stays lean — operand slab + slot stack + the
+    all-reduce's full reduced copy + its share of the packed result.
+    """
+    sched = comm_schedule or "D"
+    t_total = nb * (nb + 1) // 2
+    d = max(row_devices, 1)
+    pool = devices * d
+    scatter = "B" in sched and pool > 1
+    s_max = _bfs_makespan(nb, devices, sched)
+    tile = tile_w * tile_w * itemsize
+    operand = (m // d) * nb * tile_w * itemsize
+    local_stack = s_max * tile
+    if scatter:
+        t_pad = -(-t_total // pool) * pool
+        staging = (t_pad + 1) * tile
+        chunk = (t_pad // pool) * tile
+        result = chunk if out == "packed" else (nb * tile_w) ** 2 * itemsize
+        return operand + local_stack + staging + result
+    reduced = s_max * tile if d > 1 else 0
+    result = t_total * tile
+    if out == "dense":
+        result += (nb * tile_w) ** 2 * itemsize
+    return operand + local_stack + reduced + result
+
+
+def comm_schedule_candidates(nb: int, max_levels: Optional[int] = None) -> list:
+    """Interleaving strings the planner enumerates for one stripe grid:
+    every string over {'B','D'} up to ``min(max_levels, tree depth)``
+    characters (``None`` — the psum schedule — is always candidate 0)."""
+    if max_levels is None:
+        max_levels = defaults.MAX_COMM_SCHEDULE_LEVELS
+    depth = max(1, (nb - 1).bit_length())  # ceil(log2(nb)): tile-tree depth
+    max_levels = min(max_levels, depth)
+    out = [None]
+    frontier = [""]
+    for _ in range(max_levels):
+        frontier = [s + c for s in frontier for c in ("D", "B")]
+        out.extend(frontier)
+    return out
+
+
+def choose_comm_schedule(
+    nb: int,
+    tile_w: int,
+    devices: int,
+    row_devices: int = 1,
+    *,
+    m: int,
+    out: str = "packed",
+    itemsize: int = 4,
+    machine: Optional[Machine] = None,
+    backend: str = "cpu",
+    n: Optional[int] = None,
+) -> Optional[str]:
+    """The planner's interleaving argmin for one (shape, mesh, memory).
+
+    Scores every candidate string by α-β communication time plus the
+    compute-imbalance penalty of its subgroup assignment (makespan tiles
+    over the balanced ``ceil(T/P)``), discards candidates whose
+    per-device residency exceeds the machine's memory budget (falling
+    back to the minimum-memory candidate when all bust it), and returns
+    the argmin — ``None`` means the plain psum schedule wins. With ``n``
+    given, BFS-containing candidates are priced at their own
+    pool-divisible :func:`bfs_tiling` grid (the grid the dispatch will
+    actually run them on) instead of the psum schedule's ``(nb, tile_w)``.
+    """
+    mach = machine or machine_for(backend)
+    pool = devices * max(row_devices, 1)
+    scored, overflow = [], []
+    for sched in comm_schedule_candidates(nb):
+        nb_s, w_s = (nb, tile_w)
+        if sched and "B" in sched and pool > 1 and n is not None:
+            nb_s, w_s = bfs_tiling(n, pool, devices=devices, out=out)
+        secs = comm_seconds(mach, sched, nb_s, w_s, devices, row_devices,
+                            out=out, itemsize=itemsize)
+        # imbalance: extra tiles on the busiest device, priced as extra
+        # launches (the dominant per-tile cost at bench scale is the leaf
+        # dispatch; exact flops would need m and double-count compute_s)
+        t_per = -(-(nb_s * (nb_s + 1) // 2) // devices)
+        extra = _bfs_makespan(nb_s, devices, sched) - t_per
+        secs += extra * mach.launch_overhead_s
+        mem = comm_memory_bytes(sched, nb_s, w_s, devices, row_devices,
+                                m=m, out=out, itemsize=itemsize)
+        (scored if mem <= mach.device_memory_bytes else overflow).append(
+            (secs, mem, sched))
+    if not scored:
+        # every candidate busts the budget: least-memory one, by the rule
+        return min(overflow, key=lambda t: (t[1], t[0]))[2]
+    return min(scored, key=lambda t: t[0])[2]
+
+
 def predict_seconds(
     op: str,
     algorithm: str,
@@ -460,6 +725,8 @@ def predict_seconds(
     nb: Optional[int] = None,
     tile_w: Optional[int] = None,
     leaf_dispatch: str = "unrolled",
+    row_devices: int = 1,
+    comm_schedule: Optional[str] = None,
 ) -> float:
     """Roofline prediction for one candidate configuration.
 
@@ -526,12 +793,32 @@ def predict_seconds(
             else mach.add_word_cost
         )
         combine_bytes = add_word_cost * adds * itemsize
-    if devices > 1 and op == "ata":
+    comm_s = 0.0
+    pool = devices * max(row_devices, 1)
+    if op == "ata" and pool > 1:
         if nb is None or tile_w is None:
-            nb, tile_w = distributed_tiling(
-                n, devices, out=out, packed_block=packed_block
-            )
+            if comm_schedule and "B" in comm_schedule:
+                nb, tile_w = bfs_tiling(n, pool, devices=devices, out=out)
+            else:
+                # pure row-shard (devices == 1): one full-width stripe —
+                # gram_rowshard's whole-matrix row all-reduce
+                nb, tile_w = distributed_tiling(
+                    n, devices, out=out, packed_block=packed_block
+                )
         out_bytes = retrieval_bytes(out, nb, tile_w, itemsize)
+        # the α-β collective term: message latency (the piece that was
+        # silently zero before this revision) + transfer time of the
+        # schedule's reduction and root-gather phases, plus the subgroup
+        # assignment's compute-imbalance penalty (makespan tiles over the
+        # balanced split, priced like choose_comm_schedule does).
+        comm_s = comm_seconds(
+            mach, comm_schedule, nb, tile_w, devices, row_devices,
+            out=out, itemsize=itemsize,
+        )
+        t_per = -(-(nb * (nb + 1) // 2) // devices)
+        comm_s += (
+            _bfs_makespan(nb, devices, comm_schedule) - t_per
+        ) * mach.launch_overhead_s
     else:
         out_bytes = _output_bytes(op, out, n, k, packed_block, itemsize)
     memory_s = b * (stream_bytes + out_bytes) / mach.hbm_bw
@@ -540,7 +827,7 @@ def predict_seconds(
         dispatch_calls(op, algorithm, m, n, k, n_base, leaf_dispatch)
         * mach.launch_overhead_s
     )
-    return max(compute_s, memory_s) + combine_s + overhead_s
+    return max(compute_s, memory_s) + combine_s + overhead_s + comm_s
 
 
 # ---------------------------------------------------------------------------
@@ -587,6 +874,7 @@ def candidates(
     out: str = "dense",
     backend: str = "cpu",
     devices: int = 1,
+    row_devices: int = 1,
 ) -> list:
     """Enumerate scored candidate Plans, best predicted first.
 
@@ -610,12 +898,43 @@ def candidates(
         (syrk_bs[1], syrk_bs[1]) if op == "ata" else (gemm_bs[1], gemm_bs[2])
     ) if mach.kernels else None
     nb, tile_w = (None, None)
+    comm_scheds = [None]
+    sched_tiling = {}
+    pool = devices * max(row_devices, 1)
     if devices > 1:
         # the requested out feeds the tiling so packed plans snap tile_w
         # to the packed block grid (pure-slice retrieval, no repack)
         nb, tile_w = distributed_tiling(
             n, devices, out=out, packed_block=defaults.DEFAULT_PACKED_BLOCK
         )
+    if op == "ata" and pool > 1:
+        # the comm_schedule axis: every interleaving within the
+        # per-device memory budget (CAPS's memory-vs-bandwidth rule);
+        # if all bust it, the least-memory one via the argmin helper.
+        # BFS-containing strings run — and are priced — on their own
+        # pool-divisible grid (bfs_tiling): exact scatter chunking is
+        # what keeps their root retrieval collective-free. A pure
+        # row-sharded mesh (devices == 1, row_devices > 1) enumerates
+        # only None + BFS strings — the tri-direct reduce-scatter works
+        # over the merged pool, replacing the rowshard all-reduce, while
+        # pure-'D' strings have no task axis to interleave and would
+        # duplicate the psum plan.
+        nb_b, w_b = bfs_tiling(n, pool, devices=devices, out=out)
+        for cs in comm_schedule_candidates(nb if nb is not None else nb_b):
+            bfs = bool(cs) and "B" in cs
+            if devices == 1 and cs is not None and not bfs:
+                continue
+            sched_tiling[cs] = (nb_b, w_b) if bfs else (nb, tile_w)
+        comm_scheds = [
+            cs for cs, (nb_s, w_s) in sched_tiling.items()
+            if nb_s is None or comm_memory_bytes(
+                cs, nb_s, w_s, devices, row_devices,
+                m=m, out=out, itemsize=_ITEMSIZE.get(dtype, 4),
+            ) <= mach.device_memory_bytes
+        ] or [choose_comm_schedule(
+            nb_b, w_b, devices, row_devices, m=m, out=out,
+            itemsize=_ITEMSIZE.get(dtype, 4), machine=mach, n=n,
+        )]
 
     algos = ["dense", "strassen", "winograd"]
     n_bases = sorted({min(nb_c, max(m, n, k)) for nb_c in defaults.N_BASE_CANDIDATES})
@@ -650,23 +969,38 @@ def candidates(
 
     plans = []
     for pred, algo, n_base, ld in scored:
-        pred_out = predict_seconds(
-            op, algo, m, n, k, n_base,
-            batch=batch, dtype=dtype, out=out, machine=mach, blocks=base_tile,
-            devices=devices, nb=nb, tile_w=tile_w, leaf_dispatch=ld,
-        )
-        plans.append(
-            Plan(
-                op=op, m=m, n=n, k=k, batch=batch, dtype=dtype,
-                backend=backend, out=out, algorithm=algo, n_base=n_base,
-                packed_block=defaults.DEFAULT_PACKED_BLOCK,
-                use_kernels=mach.kernels,
-                syrk_blocks=syrk_bs, gemm_blocks=gemm_bs,
-                leaf_dispatch=ld,
-                devices=devices, nb=nb, tile_w=tile_w,
-                source="analytic", predicted_s=pred_out,
+        variants = []
+        for cs in comm_scheds:
+            nb_s, w_s = sched_tiling.get(cs, (nb, tile_w))
+            # BFS plans carry their own aligned packed grid: tile_w IS the
+            # packed block, so the scattered chunks slice straight into
+            # packed storage (see bfs_tiling)
+            pb = (w_s if cs and "B" in cs and w_s is not None
+                  else defaults.DEFAULT_PACKED_BLOCK)
+            pred_out = predict_seconds(
+                op, algo, m, n, k, n_base,
+                batch=batch, dtype=dtype, out=out, machine=mach,
+                blocks=base_tile, devices=devices, nb=nb_s, tile_w=w_s,
+                leaf_dispatch=ld, row_devices=row_devices, comm_schedule=cs,
             )
-        )
+            variants.append(
+                Plan(
+                    op=op, m=m, n=n, k=k, batch=batch, dtype=dtype,
+                    backend=backend, out=out, algorithm=algo, n_base=n_base,
+                    packed_block=pb,
+                    use_kernels=mach.kernels,
+                    syrk_blocks=syrk_bs, gemm_blocks=gemm_bs,
+                    leaf_dispatch=ld,
+                    devices=devices, nb=nb_s, tile_w=w_s,
+                    row_devices=row_devices, comm_schedule=cs,
+                    source="analytic", predicted_s=pred_out,
+                )
+            )
+        # comm_schedule is ranked *within* each algorithm entry (the α-β
+        # term is algorithm-invariant), preserving the out-invariant
+        # algorithm/n_base ordering above.
+        variants.sort(key=lambda p: p.predicted_s)
+        plans.extend(variants)
     return plans
 
 
@@ -741,11 +1075,14 @@ def default_plan(
     out: str = "dense",
     backend: str = "cpu",
     devices: int = 1,
+    row_devices: int = 1,
 ) -> Plan:
     """The pre-tune-subsystem hardcoded configuration, as a Plan.
 
     This is the baseline `bench_tune` measures the planner against, and the
     fallback consumers use when a caller pins *some* tunables manually.
+    The distributed default keeps ``comm_schedule=None`` — the plain psum
+    schedule the BFS/DFS planner is measured against.
     """
     k = n if k is None else k
     mach = machine_for(backend)
@@ -763,7 +1100,8 @@ def default_plan(
         syrk_blocks=defaults.SYRK_BLOCKS, gemm_blocks=defaults.GEMM_BLOCKS,
         leaf_dispatch=defaults.DEFAULT_LEAF_DISPATCH,
         method=defaults.DEFAULT_SOLVE_METHOD if op == "solve" else None,
-        devices=devices, nb=nb, tile_w=tile_w, source="default",
+        devices=devices, nb=nb, tile_w=tile_w, row_devices=row_devices,
+        source="default",
     )
 
 
@@ -844,5 +1182,69 @@ def distributed_tiling(
             best = (score, nb, w)
         if t >= target_tiles_per_dev * p and waste == 0 and not misaligned:
             break
+    _, nb, w = best
+    return nb, w
+
+
+def bfs_tiling(
+    n: int,
+    pool: int,
+    *,
+    devices: Optional[int] = None,
+    out: str = "packed",
+    packed_block: Optional[int] = None,
+    n_base: Optional[int] = None,
+):
+    """Pick (nb, w) for the BFS tri-direct reduce-scatter schedule.
+
+    The scatter deals the reduced tri stack in ``T/pool``-tile chunks over
+    the merged ``(task, row)`` device pool, so the stripe count must make
+    ``T = nb(nb+1)/2`` **divisible by the pool** — then the chunking is
+    exact, the packed retrieval is an identity slice, and the compiled
+    program's only collective is the one chunk-sized reduce-scatter (an
+    uneven ``T`` forces GSPMD to all-gather the whole stack at the root
+    slice, which is exactly the cost the schedule exists to avoid).
+    Among the divisible stripe counts the scoring mirrors
+    :func:`distributed_tiling`: **subgroup balance** first (with
+    ``devices`` given — the task-axis size — the representative
+    single-``'B'`` assignment's makespan excess over ``ceil(T/devices)``,
+    weighted ``w²`` like the waste term there; region-proportional device
+    allotment rounds to integers, and a grid whose region sizes land near
+    those multiples idles nobody), then leaf Strassen depth, then packed
+    grid alignment (``w == default_block_size(n, w)`` — the dispatch
+    passes the chosen width as the packed block so retrieval stays a pure
+    slice), then width. A pool-divisible ``nb`` always exists within
+    ``2·pool`` candidates (``nb = 2·pool−1`` gives ``T = pool·(2·pool−1)``).
+    """
+    from repro.core.symmetric import default_block_size
+
+    if pool <= 1:
+        return distributed_tiling(n, pool, out=out, packed_block=packed_block)
+    if n_base is None:
+        n_base = defaults.DEFAULT_N_BASE
+
+    def strassen_depth(w: int) -> int:
+        d = 0
+        while w > n_base:
+            w -= w // 2
+            d += 1
+        return d
+
+    nb_min = max(1, math.ceil((math.sqrt(8 * pool + 1) - 1) / 2))
+    best = None
+    for nb in range(nb_min, nb_min + 2 * pool + 8):
+        t = nb * (nb + 1) // 2
+        if t < pool or t % pool:
+            continue
+        w = -(-n // nb)
+        w = -(-w // 8) * 8
+        grid = default_block_size(n, packed_block or w)
+        misaligned = 1 if w != grid else 0
+        extra = 0
+        if devices is not None and devices > 1:
+            extra = _bfs_makespan(nb, devices, "B") - (-(-t // devices))
+        score = (extra * w * w, -strassen_depth(w), misaligned, -w, nb)
+        if best is None or score < best[0]:
+            best = (score, nb, w)
     _, nb, w = best
     return nb, w

@@ -26,6 +26,7 @@ __all__ = [
     "CG_MAX_ITERS",
     "CG_TOL",
     "TARGET_TILES_PER_DEVICE",
+    "MAX_COMM_SCHEDULE_LEVELS",
     "N_BASE_CANDIDATES",
     "SYRK_BLOCK_CANDIDATES",
     "GEMM_BLOCK_CANDIDATES",
@@ -80,6 +81,13 @@ CG_TOL = 1e-6
 # Distributed tile schedule: how many lower-triangle tiles the tiling
 # search aims to give each device of the task axis (balance ↔ tile width).
 TARGET_TILES_PER_DEVICE = 2
+
+# BFS/DFS interleaving search depth: the planner enumerates every string
+# over {'B','D'} up to this many recursion levels (≤ the tile-tree depth)
+# plus None (the plain-psum schedule). 3 levels = 15 candidates — the α-β
+# model separates them well before the strings stop mattering (below tile
+# granularity the tags are no-ops).
+MAX_COMM_SCHEDULE_LEVELS = 3
 
 # Candidate grids swept by the analytic model and the measured autotuner.
 N_BASE_CANDIDATES = (128, 256, 512, 1024)

@@ -135,6 +135,7 @@ def autotune(
     out: str = "dense",
     backend: str = "cpu",
     devices: int = 1,
+    row_devices: int = 1,
     max_candidates: int = 4,
     iters: int = 8,
     warmup: int = 1,
@@ -153,7 +154,8 @@ def autotune(
     """
     from repro.tune.apply import build_callable
 
-    key = dict(batch=batch, dtype=dtype, out=out, backend=backend, devices=devices)
+    key = dict(batch=batch, dtype=dtype, out=out, backend=backend,
+               devices=devices, row_devices=row_devices)
     base = cost.default_plan(op, m, n, k, **key)
     cands = [
         c for c in cost.candidates(op, m, n, k, **key)[:max_candidates]
@@ -201,5 +203,5 @@ def _same_dispatch(a: cost.Plan, b: cost.Plan) -> bool:
     """True when two plans dispatch identically (tunables equal)."""
     keys = ("algorithm", "n_base", "packed_block", "use_kernels",
             "syrk_blocks", "gemm_blocks", "leaf_dispatch", "method",
-            "nb", "tile_w")
+            "nb", "tile_w", "comm_schedule", "row_devices")
     return all(getattr(a, f) == getattr(b, f) for f in keys)

@@ -363,6 +363,19 @@ def test_canonical_grid_covers_the_dispatch_matrix():
     assert {p.method for p in plans if p.op == "solve"} == {"factor", "cg"}
 
 
+def test_bfsdfs_plans_are_planner_selected():
+    """The distributed sweep's BFS/DFS artifacts trace the interleaving the
+    planner picked — a BFS-containing comm_schedule on a pool-divisible
+    triangle — for both output modes of the harness mesh."""
+    plans = check.bfsdfs_plans(2, 4)
+    assert {p.out for p in plans} == {"dense", "packed"}
+    for p in plans:
+        assert p.comm_schedule and "B" in p.comm_schedule
+        assert p.devices == 2 and p.row_devices == 4
+        t = p.nb * (p.nb + 1) // 2
+        assert t % (p.devices * p.row_devices) == 0
+
+
 def test_cli_quick_json_smoke(tmp_path):
     out = tmp_path / "CHECK_report.json"
     env = dict(os.environ)

@@ -425,6 +425,162 @@ assert (np.asarray(ru) == np.asarray(rf)).all()
 print("OK")
 """
 
+BFSDFS_PARITY_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.distributed import ata_bfs_dfs, ata_tile_parallel
+from repro.core.symmetric import SymmetricMatrix
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+r = np.random.default_rng(11)
+a = jnp.asarray(r.standard_normal((256, 192)), dtype=jnp.float32)
+a = jax.device_put(a, NamedSharding(mesh, P("data", None)))
+# pin ONE (nb, packed_block) grid on both schedules: every interleaving is
+# value-identical (the tri-direct scatter only adds zeros), so parity with
+# the psum schedule is bitwise, not allclose. nb=4 -> T=10 over pool=8:
+# t_pad=16, every device owns a padded chunk — the dummy-slot path too.
+kw = dict(mesh=mesh, task_axis="model", row_axis="data", n_base=32, nb=4,
+          packed_block=48)
+dense0 = jax.jit(lambda a: ata_tile_parallel(a, **kw))(a)
+packed0 = jax.jit(lambda a: ata_tile_parallel(a, out="packed", **kw))(a)
+np.testing.assert_allclose(np.asarray(dense0), np.asarray(a.T @ a),
+                           rtol=1e-4, atol=1e-4)
+for il in ("D", "B", "BD", "DB"):
+    dense = jax.jit(lambda a, il=il: ata_bfs_dfs(a, interleaving=il, **kw))(a)
+    assert (np.asarray(dense) == np.asarray(dense0)).all(), il
+    packed = jax.jit(lambda a, il=il: ata_bfs_dfs(
+        a, interleaving=il, out="packed", **kw))(a)
+    assert isinstance(packed, SymmetricMatrix), type(packed)
+    assert (np.asarray(packed.to_dense())
+            == np.asarray(packed0.to_dense())).all(), il
+print("OK")
+"""
+
+BFSDFS_LEAF_DISPATCH_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.distributed import ata_bfs_dfs
+mesh = jax.make_mesh((8,), ("model",))
+r = np.random.default_rng(12)
+a = jnp.asarray(r.standard_normal((256, 384)), dtype=jnp.float32)
+# nb=4 -> w=96 > n_base: the per-tile Strassen actually recurses, so the
+# three leaf bodies compile genuinely different programs — which must still
+# agree bitwise (leaf_dispatch never changes values) under the BFS scatter
+mk = lambda ld: jax.jit(lambda a: ata_bfs_dfs(
+    a, mesh, task_axis="model", interleaving="B", n_base=32, nb=4,
+    packed_block=96, variant="strassen", leaf_dispatch=ld))
+cu, cb, cf = mk("unrolled")(a), mk("batched")(a), mk("fused")(a)
+assert (np.asarray(cu) == np.asarray(cb)).all()
+assert (np.asarray(cu) == np.asarray(cf)).all()
+np.testing.assert_allclose(np.asarray(cf), np.asarray(a.T @ a),
+                           rtol=1e-4, atol=1e-4)
+print("OK")
+"""
+
+BFSDFS_PURE_DFS_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.analysis.hlo import collective_bytes, compiled_text
+from repro.core.distributed import ata_bfs_dfs, ata_tile_parallel
+mesh = jax.make_mesh((8,), ("model",))
+r = np.random.default_rng(13)
+a = jnp.asarray(r.standard_normal((256, 192)), dtype=jnp.float32)
+# pure 'D' degenerates to the existing schedule: same default tiling
+# (choose_tiling, not bfs_tiling), same plain psum, bitwise outputs AND an
+# identical collective footprint — no scatter, no staging buffer
+for out in ("dense", "packed"):
+    fd = jax.jit(lambda a, out=out: ata_bfs_dfs(
+        a, mesh, task_axis="model", interleaving="D", n_base=32, out=out))
+    ft = jax.jit(lambda a, out=out: ata_tile_parallel(
+        a, mesh, task_axis="model", n_base=32, out=out))
+    cd, ct = fd(a), ft(a)
+    if out == "packed":
+        cd, ct = cd.to_dense(), ct.to_dense()
+    assert (np.asarray(cd) == np.asarray(ct)).all(), out
+    bd = collective_bytes(compiled_text(fd, a))
+    bt = collective_bytes(compiled_text(ft, a))
+    assert bd == bt, (out, bd, bt)
+print("OK")
+"""
+
+BFSDFS_6DEV_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.distributed import ata_bfs_dfs, ata_tile_parallel
+from repro.tune.cost import bfs_tiling
+assert len(jax.devices()) == 6, jax.devices()
+mesh = jax.make_mesh((6,), ("model",))
+r = np.random.default_rng(14)
+a = jnp.asarray(r.standard_normal((192, 160)), dtype=jnp.float32)
+# pool=6 (neither a power of two nor 8): bfs_tiling must still hand back a
+# pool-divisible triangle so the scatter chunks exactly
+nb, w = bfs_tiling(160, 6, devices=6, out="packed")
+assert (nb * (nb + 1) // 2) % 6 == 0, (nb, w)
+kw = dict(mesh=mesh, task_axis="model", n_base=32, nb=nb, packed_block=w)
+dense0 = jax.jit(lambda a: ata_tile_parallel(a, **kw))(a)
+np.testing.assert_allclose(np.asarray(dense0), np.asarray(a.T @ a),
+                           rtol=1e-4, atol=1e-4)
+for il in ("B", "BD"):
+    c = jax.jit(lambda a, il=il: ata_bfs_dfs(a, interleaving=il, **kw))(a)
+    assert (np.asarray(c) == np.asarray(dense0)).all(), il
+    pk = jax.jit(lambda a, il=il: ata_bfs_dfs(
+        a, interleaving=il, out="packed", **kw))(a)
+    assert (np.asarray(pk.to_dense()) == np.asarray(dense0)).all(), il
+# a user-pinned ragged grid (T=10, 10 % 6 != 0) still scatters correctly:
+# t_pad rounds up and the sacrificial row swallows the dummy ids
+c2 = jax.jit(lambda a: ata_bfs_dfs(
+    a, mesh, task_axis="model", n_base=32, nb=4, interleaving="B"))(a)
+ct2 = jax.jit(lambda a: ata_tile_parallel(
+    a, mesh, task_axis="model", n_base=32, nb=4))(a)
+assert (np.asarray(c2) == np.asarray(ct2)).all()
+print("OK")
+"""
+
+BFSDFS_RANKING_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.analysis.hlo import collective_bytes, compiled_text
+from repro.core.distributed import ata_bfs_dfs, ata_tile_parallel, choose_tiling
+from repro.tune import cost
+# the alpha-beta comm model's per-mesh ranking (BFS tri-direct scatter vs
+# psum) must match the measured collective-bytes ranking at every task
+# width P of the 8-device pool — the calibration configuration of the
+# collectives_bfsdfs bench rows. Wall clock on fake CPU devices is
+# emulation noise (obs.calibrate's drift table shows >2x single-device
+# drift), but the compiled collective payload is exact, so bytes are the
+# honest comm measurement here. Only the per-mesh B-vs-psum ordering is
+# contractual: cross-P psum bytes are non-monotone (GSPMD folds parts of
+# the retrieval at some widths), which is exactly why the planner prices
+# schedules per mesh instead of reusing one measurement.
+m, n = 512, 1024
+mach = cost.machine_for("cpu")
+r = np.random.default_rng(15)
+a0 = jnp.asarray(r.standard_normal((m, n)), dtype=jnp.float32)
+for pt in (2, 4, 8):
+    d = 8 // pt
+    mesh = Mesh(np.asarray(jax.devices()).reshape(d, pt), ("data", "model"))
+    a = jax.device_put(a0, NamedSharding(mesh, P("data", None)))
+    ra = "data" if d > 1 else None
+    nb_b, w_b = cost.bfs_tiling(n, 8, devices=pt, out="packed")
+    nb_d, w_d = choose_tiling(n, pt, out="packed")
+    model = {
+        "B": cost.comm_seconds(mach, "B", nb_b, w_b, pt, d, out="packed"),
+        "psum": cost.comm_seconds(mach, None, nb_d, w_d, pt, d,
+                                  out="packed"),
+    }
+    fb = jax.jit(lambda a, nb=nb_b, w=w_b, ra=ra: ata_bfs_dfs(
+        a, mesh, task_axis="model", row_axis=ra, interleaving="B",
+        n_base=64, nb=nb, packed_block=w, out="packed"))
+    fp = jax.jit(lambda a, nb=nb_d, ra=ra: ata_tile_parallel(
+        a, mesh, task_axis="model", row_axis=ra, n_base=64, nb=nb,
+        out="packed"))
+    meas = {
+        "B": sum(collective_bytes(compiled_text(fb, a)).values()),
+        "psum": sum(collective_bytes(compiled_text(fp, a)).values()),
+    }
+    assert sorted(model, key=model.get) == sorted(meas, key=meas.get), \
+        (pt, model, meas)
+    assert model["B"] < model["psum"], (pt, model)
+    assert meas["B"] < meas["psum"], (pt, meas)
+print("OK")
+"""
+
 POWERSGD_SHARDED_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -462,13 +618,23 @@ print("OK")
     [TILE_SCRIPT, TILE_2D_SCRIPT, ROWSHARD_SCRIPT, COLSHARD_SCRIPT,
      TILE_RAGGED_SCRIPT, TILE_PACKED_SCRIPT, TILE_2D_PACKED_SCRIPT,
      ROWSHARD_PACKED_SCRIPT, TILE_BF16_SCRIPT, FUSED_DISPATCH_SCRIPT,
+     BFSDFS_PARITY_SCRIPT, BFSDFS_LEAF_DISPATCH_SCRIPT,
+     BFSDFS_PURE_DFS_SCRIPT, BFSDFS_RANKING_SCRIPT,
      POWERSGD_SHARDED_SCRIPT],
     ids=["tile_8dev", "tile_2d", "rowshard", "colshard", "tile_ragged",
          "tile_packed", "tile_2d_packed", "rowshard_packed", "tile_bf16",
-         "fused_dispatch", "powersgd_sharded"],
+         "fused_dispatch", "bfsdfs_parity", "bfsdfs_leaf_dispatch",
+         "bfsdfs_pure_dfs", "bfsdfs_ranking", "powersgd_sharded"],
 )
 def test_multidevice(script):
     _run_in_subprocess(script)
+
+
+def test_bfsdfs_six_devices():
+    """BFS/DFS on a 6-device pool — not a power of two, not the 8 the other
+    scripts assume: bfs_tiling's pool-divisible triangle, subgroup splits
+    over {1,2,3,6}-device groups, and the ragged user-pinned grid."""
+    _run_in_subprocess(BFSDFS_6DEV_SCRIPT, devices=6)
 
 
 SP_DECODE_SCRIPT = r"""

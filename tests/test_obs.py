@@ -287,19 +287,19 @@ def test_cache_migration_sanitization_and_skip_counters(tmp_path, caplog):
     good = plan.to_json()
     weird = dict(good, leaf_dispatch="quantum")
     payload = {
-        "schema": "v3",
+        "schema": "v4",
         "plans": {
             "v1|ata|old-schema-key": good,       # migrated
-            "v3|ata|weird-dispatch": weird,      # sanitized
-            "v3|ata|broken": {"nonsense": 1},    # skipped
+            "v4|ata|weird-dispatch": weird,      # sanitized
+            "v4|ata|broken": {"nonsense": 1},    # skipped
         },
     }
     path = tmp_path / "plans.json"
     path.write_text(json.dumps(payload))
     with caplog.at_level(logging.WARNING, logger="repro.tune.cache"):
         plans = tune_cache.load_cache(str(path))
-    assert set(plans) == {"v3|ata|old-schema-key", "v3|ata|weird-dispatch"}
-    assert plans["v3|ata|weird-dispatch"].leaf_dispatch == "unrolled"
+    assert set(plans) == {"v4|ata|old-schema-key", "v4|ata|weird-dispatch"}
+    assert plans["v4|ata|weird-dispatch"].leaf_dispatch == "unrolled"
     stats = tune_cache.cache_stats()
     assert stats["migrated"] == 1
     assert stats["sanitized"] == 1

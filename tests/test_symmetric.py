@@ -173,3 +173,44 @@ def test_syrk_write_traffic_model():
     # triangular writes — strictly the worst of the three
     assert mirror > dual > packed
     assert packed / dual == pytest.approx((nb + 1) / (2 * nb))
+
+
+def test_from_tile_stack_presymmetrized_skips_diag_symmetrize():
+    """``presymmetrized=True`` is the BFS/DFS schedule's contract: the
+    producer already applied ``sym_tile`` to every diagonal tile, so the
+    aligned path must trust the stack verbatim (on a sharded stack
+    ``_symmetrize_diag`` is a whole cross-device gather). The misaligned
+    path re-symmetrizes regardless — ``sym_tile`` is idempotent, so
+    presymmetrized inputs stay bitwise-correct there too."""
+    from repro.core.symmetric import sym_tile
+
+    rng = np.random.default_rng(21)
+    n, nb, w = 96, 3, 32
+    t = nb * (nb + 1) // 2
+    tiles = jnp.asarray(rng.standard_normal((t, w, w)), jnp.float32)
+
+    # aligned (w == packed block): raw asymmetric diagonals are symmetrized
+    # by default...
+    sym = SymmetricMatrix.from_tile_stack(tiles, n, nb=nb, packed_block=w)
+    # ...and trusted verbatim under the flag
+    raw = SymmetricMatrix.from_tile_stack(tiles, n, nb=nb, packed_block=w,
+                                          presymmetrized=True)
+    assert (np.asarray(raw.blocks) == np.asarray(tiles)).all()
+    assert not (np.asarray(sym.blocks) == np.asarray(tiles)).all()
+
+    # a producer that actually pre-symmetrizes gets bitwise the same
+    # storage either way
+    diag_t = np.array([i * (i + 1) // 2 + i for i in range(nb)])
+    pre = tiles.at[diag_t].set(sym_tile(tiles[diag_t]))
+    a = SymmetricMatrix.from_tile_stack(pre, n, nb=nb, packed_block=w)
+    b = SymmetricMatrix.from_tile_stack(pre, n, nb=nb, packed_block=w,
+                                        presymmetrized=True)
+    assert (np.asarray(a.blocks) == np.asarray(b.blocks)).all()
+
+    # misaligned (stripe w=32 onto a 48-block grid): the flag is inert —
+    # the repack mixes stripe tiles, so it must re-symmetrize either way
+    c = SymmetricMatrix.from_tile_stack(pre, n, nb=nb, packed_block=48)
+    d = SymmetricMatrix.from_tile_stack(pre, n, nb=nb, packed_block=48,
+                                        presymmetrized=True)
+    assert (np.asarray(c.blocks) == np.asarray(d.blocks)).all()
+    assert (np.asarray(c.to_dense()) == np.asarray(c.to_dense()).T).all()

@@ -162,31 +162,37 @@ def test_corrupt_cache_entries_are_skipped_not_fatal(tmp_path):
 
 
 def test_old_schema_cache_files_still_load_and_serve(tmp_path):
-    """Regression (schema bumps v1→v2 op='solve', v2→v3 fused leaves): an
-    old cache file — old schema tag, old-prefixed keys, Plan entries
-    WITHOUT later fields — must keep loading and serving its measured
-    plans (same tolerance contract as the corrupt-entry fix: never
-    fatal)."""
+    """Regression (schema bumps v1→v2 op='solve', v2→v3 fused leaves,
+    v3→v4 comm_schedule): an old cache file — old schema tag,
+    old-prefixed keys, Plan entries WITHOUT later fields — must keep
+    loading and serving its measured plans (same tolerance contract as
+    the corrupt-entry fix: never fatal)."""
     key_now = plan_key("ata", 640, 640, 640, 0, "float32", "dense", "cpu")
-    assert key_now.startswith("v3|")
-    for old in ("v1", "v2"):
+    assert key_now.startswith("v4|")
+    for old in ("v1", "v2", "v3"):
         path = str(tmp_path / f"{old}.json")
         p = dataclasses.replace(
             tune.plan(op="ata", m=640, n=640), n_base=128,
             source="measured", measured_s=1e-3,
         )
         key_old = old + "|" + key_now.split("|", 1)[1]
+        # pre-v4 keys had no row-devices segment either
+        key_old = key_old.replace("|r=1", "")
         entry = p.to_json()
+        del entry["comm_schedule"]  # the fields did not exist pre-v4
+        del entry["row_devices"]
         if old == "v1":
             del entry["method"]  # the field did not exist pre-PR-5
         with open(path, "w") as f:
             json.dump({"schema": old, "plans": {key_old: entry}}, f)
 
         loaded = load_cache(path)
-        # the old key migrates to the current prefix, missing fields default
+        # the old key migrates to the current prefix (r=1 inserted),
+        # missing fields default
         assert set(loaded) == {key_now}
         if old == "v1":
             assert loaded[key_now].method is None
+        assert loaded[key_now].comm_schedule is None
         assert loaded[key_now].n_base == 128
 
         tune.cache.clear_memo()
@@ -223,6 +229,117 @@ def test_unknown_leaf_dispatch_in_cache_falls_back_to_unrolled(tmp_path):
     np.testing.assert_allclose(
         np.asarray(got), np.asarray(a.T @ a), rtol=2e-4, atol=2e-4
     )
+
+
+def test_unknown_comm_schedule_in_cache_sanitizes_to_psum(tmp_path):
+    """Regression (BFS/DFS PR hardening): a cache entry written by a future
+    schema may carry an interleaving string this revision's
+    bfs_dfs_assignment has never heard of. Loading must sanitize it to
+    None — the psum schedule, always valid and bitwise-identical — not
+    raise at every planned dispatch."""
+    path = str(tmp_path / "future.json")
+    p = dataclasses.replace(
+        tune.plan(op="ata", m=640, n=640), n_base=256,
+        comm_schedule="BQX", source="measured", measured_s=1e-3,
+    )
+    key = plan_key("ata", 640, 640, 640, 0, "float32", "dense", p.backend)
+    with open(path, "w") as f:
+        json.dump({"schema": "v4", "plans": {key: p.to_json()}}, f)
+
+    loaded = load_cache(path)
+    assert loaded[key].comm_schedule is None
+    assert loaded[key].n_base == 256  # the rest of the entry survives
+
+    # a *valid* future-ish interleaving is preserved verbatim
+    with open(path, "w") as f:
+        json.dump({"schema": "v4", "plans": {
+            key: dataclasses.replace(p, comm_schedule="BDB").to_json()}}, f)
+    assert load_cache(path)[key].comm_schedule == "BDB"
+
+    # and the front door serves the sanitized plan
+    with open(path, "w") as f:
+        json.dump({"schema": "v4", "plans": {key: p.to_json()}}, f)
+    tune.cache.clear_memo()
+    served = tune.plan(op="ata", m=640, n=640, cache_file=path)
+    assert served.source == "cache" and served.comm_schedule is None
+
+
+# --- BFS/DFS comm planning --------------------------------------------------
+
+
+def test_bfs_tiling_pool_divisible_triangle():
+    """The BFS grid's tile triangle must divide the merged device pool
+    (tri-direct reduce-scatter chunks exactly; packed retrieval is an
+    identity slice) while keeping the usual tiling invariants."""
+    from repro.tune.cost import bfs_tiling
+
+    for n in (160, 512, 777, 1024, 4096):
+        for pool in (1, 2, 3, 4, 6, 8, 16):
+            nb, w = bfs_tiling(n, pool)
+            t = nb * (nb + 1) // 2
+            if pool > 1:
+                assert t % pool == 0, (n, pool, nb)
+            assert nb * w >= n
+            assert w % 8 == 0
+
+
+def test_bfs_tiling_balances_bfs_assignment():
+    """With ``devices`` given, the grid search penalizes triangles whose
+    BFS subgroup split leaves a device group over-assigned (extra tiles
+    beyond the ideal ceil(T/devices) makespan, weighted by tile area).
+    The chosen grid's imbalance cost never exceeds the device-blind
+    choice's, and strictly improves on it at the bench mesh — nb=15's 'B'
+    split over-assigns by 6 tiles at 4 devices; the search moves to
+    nb=16 (2 extra)."""
+    from repro.tune.cost import _bfs_makespan, bfs_tiling
+
+    def extra_cost(nb, w, devices):
+        t = nb * (nb + 1) // 2
+        return (_bfs_makespan(nb, devices, "B") - -(-t // devices)) * w * w
+
+    nb_blind, w_blind = bfs_tiling(1024, 8)
+    for devices in (2, 4, 8):
+        nb, w = bfs_tiling(1024, 8, devices=devices)
+        assert extra_cost(nb, w, devices) <= \
+            extra_cost(nb_blind, w_blind, devices), (devices, nb)
+    nb4, w4 = bfs_tiling(1024, 8, devices=4)
+    assert extra_cost(nb4, w4, 4) < extra_cost(nb_blind, w_blind, 4)
+
+
+def test_planner_selects_bfs_interleaving():
+    """Acceptance: the *planner* — not a hardcoded string — picks the BFS
+    schedule at every multi-device bench mesh (the comm model prices the
+    tri-direct scatter under the psum schedule's all-reduce + diag-gather),
+    and keeps the psum schedule on a single device."""
+    from repro.tune import cost
+
+    for devices, row_devices in ((2, 4), (4, 2), (8, 1), (2, 1), (4, 1)):
+        for out in ("dense", "packed"):
+            top = cost.candidates("ata", 1024, 1024, out=out,
+                                  devices=devices, row_devices=row_devices)[0]
+            assert top.comm_schedule and "B" in top.comm_schedule, \
+                (devices, row_devices, out, top.comm_schedule)
+    single = cost.candidates("ata", 1024, 1024, out="packed", devices=1)[0]
+    assert single.comm_schedule is None
+
+
+def test_comm_model_prices_bfs_under_psum_at_bench_meshes():
+    """The alpha-beta totals behind the selection above: at the bench
+    meshes the one-chunk tri-direct scatter undercuts the psum schedule's
+    row all-reduce + root gather + diag-symmetrization gather."""
+    from repro.core.distributed import choose_tiling
+    from repro.tune.cost import bfs_tiling, comm_seconds, machine_for
+
+    mach = machine_for("cpu")
+    for devices, row_devices in ((2, 4), (4, 2), (8, 1)):
+        pool = devices * row_devices
+        nb_b, w_b = bfs_tiling(1024, pool, devices=devices)
+        nb_d, w_d = choose_tiling(1024, devices, out="packed")
+        b = comm_seconds(mach, "B", nb_b, w_b, devices, row_devices,
+                         out="packed")
+        d = comm_seconds(mach, None, nb_d, w_d, devices, row_devices,
+                         out="packed")
+        assert b < d, (devices, row_devices, b, d)
 
 
 # --- autotune ---------------------------------------------------------------
