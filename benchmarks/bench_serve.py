@@ -1,0 +1,122 @@
+"""Serve-path benchmark: warm-vs-cold request latency, SLO percentiles,
+throughput (``BENCH_serve.json``).
+
+The serving story in numbers (ROADMAP open item 2): a **cold** request —
+fresh server, no pre-warm — pays trace + plan + XLA compile on the
+request path; a **warm** request pays a dictionary lookup plus one
+batched launch. The headline row is the ratio between the two on the same
+bucket (the PR's acceptance floor is 10x; interpret-mode CPU containers
+measure it in the hundreds).
+
+Rows:
+
+* ``serve_cold_first_request``  — fresh server, first request, untraced
+* ``serve_warm_request``        — warmed server, single-request median
+* ``serve_warm_vs_cold``        — the ratio row (``ratio`` field)
+* ``serve_workload_p50/p95/p99``— mixed-workload request-latency SLOs
+* ``serve_throughput``          — requests/s over the mixed workload
+* ``serve_obs_snapshot``        — obs snapshot validation (``valid`` +
+  ``serve.*`` counters present — the telemetry contract)
+
+Smoke mode shrinks the workload, not the contract.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, smoke
+
+
+# the bucket both sides of the ratio are measured on — the smallest of
+# the shared smoke lattice, so cold compile stays CI-cheap
+_RATIO_BUCKET = dict(op="lstsq", m=48, n=32, r=4)
+
+
+def _one_request(rng, op="lstsq", m=48, n=32, r=4, ridge=0.0):
+    from repro.serve.queue import Request
+
+    a = rng.standard_normal((m, n)).astype("float32")
+    rows = m if op == "lstsq" else n
+    b = rng.standard_normal((rows, r)).astype("float32")
+    return Request(op=op, a=a, b=b, ridge=ridge)
+
+
+def _timed_single(server, rng, **shape) -> float:
+    t0 = time.perf_counter()
+    server.submit(_one_request(rng, **shape))
+    server.drain()
+    return time.perf_counter() - t0
+
+
+def run() -> None:
+    from repro.obs import metrics as obs_metrics
+    from repro.serve import metrics as serve_metrics
+    from repro.serve.engine import Server, smoke_config
+
+    cfg = smoke_config()
+    rng = np.random.default_rng(0)
+    n_requests = 40 if smoke() else 200
+    warm_reps = 5 if smoke() else 20
+
+    # --- cold: fresh server, nothing traced, first request pays it all
+    cold_server = Server(cfg)
+    cold_s = _timed_single(cold_server, rng, **_RATIO_BUCKET)
+    emit("serve_cold_first_request", cold_s, "untraced first request",
+         shape=(_RATIO_BUCKET["m"], _RATIO_BUCKET["n"], _RATIO_BUCKET["r"]))
+
+    # --- warm: pre-warmed server, same bucket, single-request median
+    server = Server(cfg)
+    t0 = time.perf_counter()
+    server.warm()
+    warm_pass_s = time.perf_counter() - t0
+    singles = sorted(
+        _timed_single(server, rng, **_RATIO_BUCKET) for _ in range(warm_reps))
+    warm_s = singles[len(singles) // 2]
+    emit("serve_warm_request", warm_s,
+         f"median of {warm_reps} (warm pass {warm_pass_s:.2f}s)",
+         shape=(_RATIO_BUCKET["m"], _RATIO_BUCKET["n"], _RATIO_BUCKET["r"]))
+
+    ratio = cold_s / warm_s
+    emit("serve_warm_vs_cold", cold_s - warm_s,
+         f"cold/warm = {ratio:.0f}x", ratio=round(ratio, 1),
+         cold_seconds=cold_s, warm_seconds=warm_s)
+
+    # --- mixed workload on the warmed server: SLO percentiles + throughput
+    from repro.serve.__main__ import _mixed_workload, _run_workload
+
+    # the reservoirs are process-global: drop the cold/warm phases' samples
+    # so the SLO rows measure the workload, not the measurement rig
+    serve_metrics.reset()
+    t0 = time.perf_counter()
+    served, rejected = _run_workload(server, _mixed_workload(n_requests, 1))
+    wall = time.perf_counter() - t0
+    pct = serve_metrics.percentiles("request") or {}
+    for key in ("p50", "p95", "p99"):
+        emit(f"serve_workload_{key}", pct.get(key, float("nan")),
+             f"request latency {key} over {len(served)} requests")
+    emit("serve_throughput", wall / max(len(served), 1),
+         f"{len(served)/wall:.1f} req/s ({rejected} rejected, "
+         f"{server.retraces()} retraces)",
+         requests_per_s=round(len(served) / wall, 2),
+         retraces=server.retraces())
+
+    # --- the telemetry contract: snapshot validates, serve.* present
+    serve_metrics.publish_percentiles()
+    snap = obs_metrics.validate_snapshot(obs_metrics.snapshot())
+    has_counters = any(k.startswith("serve.") for k in snap["counters"])
+    has_gauges = any(k.startswith("serve.latency.") for k in snap["gauges"])
+    if not (has_counters and has_gauges):
+        raise RuntimeError(
+            f"obs snapshot missing serve metrics (counters={has_counters}, "
+            f"gauges={has_gauges})")
+    emit("serve_obs_snapshot", 0.0, "valid",
+         serve_counters=sum(k.startswith("serve.") for k in snap["counters"]),
+         serve_gauges=sum(k.startswith("serve.latency.")
+                          for k in snap["gauges"]))
+
+
+if __name__ == "__main__":
+    run()

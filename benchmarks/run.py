@@ -48,6 +48,7 @@ BENCHES = [
     ("shampoo_integration", "benchmarks.bench_shampoo", "shampoo"),
     ("tune_planner", "benchmarks.bench_tune", "tune"),
     ("solve_normal_equations", "benchmarks.bench_solve", "solve"),
+    ("serve_gram_service", "benchmarks.bench_serve", "serve"),
 ]
 
 # multi-process device sweeps — too slow for the CI smoke job.

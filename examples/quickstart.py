@@ -127,6 +127,26 @@ def main():
           f"'{art.label}' → {len(report.violations)} violations")
     assert not report.violations, report.summary()
 
+    # --- 9. gram-as-a-service: the serving layer (repro.serve) -------------
+    # The ten-line serving story (DESIGN.md §10): warm once (plans + XLA,
+    # off the request path), then heterogeneous lstsq requests micro-batch
+    # by plan key into single launches — bitwise-equal to per-request
+    # solve.lstsq, zero steady-state retraces, p95 from the obs snapshot.
+    from repro.serve import Request, Server, metrics as serve_metrics, smoke_config
+
+    server = Server(smoke_config())
+    server.warm()
+    tickets = [server.submit(Request(
+        op="lstsq", a=rng.standard_normal((40 + i % 8, 32)).astype(np.float32),
+        b=rng.standard_normal((40 + i % 8, 1 + i % 4)).astype(np.float32),
+        ridge=1e-4)) for i in range(100)]
+    server.drain()
+    serve_metrics.publish_percentiles()
+    snap = obs.metrics.snapshot()
+    print(f"serve: {sum(t.done() for t in tickets)}/100 served, "
+          f"retraces={server.retraces()}, request p95 = "
+          f"{snap['gauges']['serve.latency.request.p95']*1e3:.2f}ms")
+
 
 if __name__ == "__main__":
     main()

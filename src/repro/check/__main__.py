@@ -23,6 +23,8 @@ def main(argv=None) -> int:
                     help="three-artifact smoke subset instead of the grid")
     ap.add_argument("--distributed", action="store_true",
                     help="check the SPMD schedules (needs >1 device)")
+    ap.add_argument("--serve", action="store_true",
+                    help="check the serve bucket callables + zero-retrace")
     ap.add_argument("--lower", action="store_true",
                     help="also compile each grid artifact (attaches HLO)")
     ap.add_argument("--rules", metavar="IDS",
@@ -43,6 +45,8 @@ def main(argv=None) -> int:
     ids = args.rules.split(",") if args.rules else None
     if args.distributed:
         report = harness.run_distributed(verbose=True)
+    elif args.serve:
+        report = harness.run_serve(verbose=True)
     else:
         report = harness.run_grid(rules=ids, lower=args.lower,
                                   quick=args.quick, verbose=True)

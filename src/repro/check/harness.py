@@ -34,7 +34,7 @@ from repro.check import rules as _rules
 __all__ = [
     "CANONICAL_SHAPE", "DEFAULT_ALLOWLIST",
     "canonical_plans", "run_grid", "distributed_plans", "bfsdfs_plans",
-    "run_distributed",
+    "run_distributed", "run_serve",
 ]
 
 # (m, n, k): rectangular; n_base forces L=2 on the ATA tree, L=1 on the
@@ -211,6 +211,104 @@ def _trace_distributed(plan, mesh, schedule: str, *, m_global=None) -> Artifact:
     hlo = compiled_text(fn, a_abs)
     return Artifact(label=f"{schedule}:{plan_label(plan)}",
                     jaxpr=closed.jaxpr, plan=plan, hlo_text=hlo)
+
+
+def _serve_expected_dots(spec, sp) -> int:
+    """Closed-form ``dot_general`` count of one serve bucket callable.
+
+    The batched pipeline's dot count is batch-invariant (the batch dim
+    rides every dot; the per-slice substitution solves are
+    ``triangular_solve``, not dots), so lstsq buckets reuse the solve
+    closed form of :func:`rules._expected_dots` verbatim. Whiten buckets
+    drop the ``Aᵀb`` dot and the backward-substitution einsum band:
+    gram + factor Schur band + ONE substitution pass.
+    """
+    if spec.op == "lstsq":
+        return _rules._expected_dots(sp)
+    gram_plan = dataclasses.replace(sp, op="ata", k=sp.n)
+    gram = _rules._expected_dots(gram_plan)
+    nbk = -(-sp.n // _rules._packed_bn(sp))
+    return gram + (nbk - 1) + max(nbk - 2, 0) + (nbk - 1)
+
+
+# the serve-path rule set: the packed/structural contracts the bucket
+# callables must honor (dot-budget rides the explicit override above;
+# launch-budget self-gates on the XLA-path smoke buckets but stays in the
+# list so kernel-path bucket configs are covered the day they exist)
+_SERVE_RULES = ("no-dense-square", "acc-dtype", "no-vmap-of-pallas",
+                "dot-budget", "launch-budget")
+
+
+def run_serve(*, config=None, steady_batches: int = 2,
+              verbose: bool = False) -> Report:
+    """Check the serve layer: trace every bucket callable of the (smoke)
+    lattice against the packed/structural rules, then run a warmed
+    steady-state loop and assert it performs **zero retraces**.
+
+    The traced program IS the program a flush dispatches
+    (``Server.bucket_callable`` — no parallel re-implementation), traced
+    on the bucket's static abstract operands. The artifact carries the
+    *batched* plan (the program's real identity) plus the
+    ``expected_dots`` override computed from the unbatched solve closed
+    form (see :func:`_serve_expected_dots`).
+
+    The retrace half is dynamic by nature: a warmed :class:`Server`
+    serves ``steady_batches`` full flushes per bucket; any growth of a
+    jit cache past the warm floor lands as a ``serve-no-retrace``
+    finding (plus the engine's own ``serve.retraces`` counter).
+    """
+    import numpy as np
+
+    from repro.check.findings import Finding
+    from repro.serve.engine import Server, serve_abstract_args, smoke_config
+    from repro.serve.queue import Request
+
+    if config is None:
+        config = smoke_config()
+    server = Server(config)
+    report = Report(DEFAULT_ALLOWLIST)
+
+    import jax
+
+    for spec in config.buckets:
+        if verbose:
+            print(f"  tracing serve:{spec.label()}", flush=True)
+        fn, sp = server.bucket_callable(spec)
+        closed = jax.make_jaxpr(fn)(*serve_abstract_args(spec))
+        batched = dataclasses.replace(sp, batch=spec.batch)
+        art = Artifact(
+            label=f"serve:{spec.label()}", jaxpr=closed.jaxpr, plan=batched,
+            overrides={"expected_dots": _serve_expected_dots(spec, sp)})
+        _rules.run(art, rules=_SERVE_RULES, allowlist=report.allowlist,
+                   report=report)
+
+    # steady-state: warm, then flush full batches and hold the jit caches
+    # to the warm floor (the engine raises on strict_retrace — the harness
+    # wants a Finding instead, so it serves in counter mode)
+    if verbose:
+        print("  warming serve steady-state loop", flush=True)
+    server = Server(dataclasses.replace(config, strict_retrace=False))
+    server.warm()
+    rng = np.random.default_rng(0)
+    for spec in config.buckets:
+        for _ in range(steady_batches):
+            for _i in range(spec.batch):
+                a = rng.standard_normal((spec.m, spec.n)).astype(spec.dtype)
+                rows = spec.m if spec.op == "lstsq" else spec.n
+                b = rng.standard_normal((rows, spec.r)).astype(spec.dtype)
+                server.submit(Request(op=spec.op, a=a, b=b))
+    server.drain()
+    findings = []
+    if server.retraces():
+        findings.append(Finding(
+            rule="serve-no-retrace",
+            message=f"steady-state loop retraced {server.retraces()} times "
+                    "after the warm pass (compile-cache floor exceeded)",
+            artifact="serve:steady-state"))
+    report.add(findings)
+    report.record_artifact("serve:steady-state", ["serve-no-retrace"],
+                           len(findings))
+    return report
 
 
 def run_distributed(*, mesh=None,

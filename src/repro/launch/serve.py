@@ -26,6 +26,19 @@ from repro.models.transformer import init, init_cache
 from repro.train.serve_step import make_decode_step, make_prefill_step, sample_logits
 
 
+def _pad_slots(real: np.ndarray, b: int) -> np.ndarray:
+    """Zero-pad a ragged tail batch of ``n < b`` real prompts up to the
+    static slot count. Keeps the prefill/decode shapes static (no retrace
+    on the tail) without drawing RNG for padding slots — the tail batch
+    used to prefill ``b`` fresh prompts and advance the generator for
+    slots nobody requested."""
+    n = real.shape[0]
+    if n == b:
+        return real
+    pad = np.zeros((b - n, *real.shape[1:]), dtype=real.dtype)
+    return np.concatenate([real, pad], axis=0)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
@@ -63,7 +76,11 @@ def main(argv=None):
     tokens_out = 0
     while served < args.requests:
         n = min(b, args.requests - served)
-        prompts = new_prompts(b)  # full slot batch; extra slots are padding
+        # generate only the n real prompts; zero-fill the padding slots
+        # (static batch shape, but the RNG stream no longer advances for
+        # slots nobody requested — the tail is reproducible vs a run whose
+        # request count is a multiple of the slot count)
+        prompts = _pad_slots(new_prompts(n), b)
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         logits, cache = prefill(params, batch)
         key, k1 = jax.random.split(key)

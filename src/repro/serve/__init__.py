@@ -1,0 +1,65 @@
+"""``repro.serve`` — Gram-as-a-service: the batched solve server.
+
+The fifth architectural layer (algorithms → planner → kernels → solvers →
+**server**): a request front door that turns the repo's planned packed
+normal-equations stack into a serving path. Heterogeneous ``lstsq`` /
+``whiten`` requests are bucketed by **plan key** (exact feature dimension
+``n``, banded row count ``m`` and RHS count ``r``, dtype — see
+:mod:`repro.serve.bucketing`), micro-batched per bucket, and each flush
+runs as ONE jitted batched launch whose per-request results are
+bitwise-equal to per-request ``solve.lstsq`` under the same plan (the
+parity contract of :mod:`repro.serve.bucketing`).
+
+The serving economics the layer exists for: a cold request pays
+trace + plan + XLA compile (hundreds of milliseconds); after
+:meth:`Server.warm` every configured bucket's plan is resolved (one
+plan-cache file read via ``tune.cache.warm``) and its callable compiled,
+so a request pays a dictionary lookup plus one batched solve — and the
+steady-state loop performs **zero retraces**, asserted per dispatch
+against the jit compile-cache size, not hoped (``serve.retraces`` stays
+0 or the engine raises).
+
+Modules:
+
+* :mod:`repro.serve.bucketing` — the bucket lattice, pad/crop rules, and
+  the bitwise-parity contract.
+* :mod:`repro.serve.queue` — bounded admission queue: deadline-aware
+  admission, explicit reject-with-retry-after backpressure, and the
+  max-wait/max-batch flush policy.
+* :mod:`repro.serve.engine` — ``Server``: pre-warm pass, the batched
+  bucket callables, the steady-state dispatch loop.
+* :mod:`repro.serve.metrics` — ``serve.*`` counters/gauges into
+  ``repro.obs`` plus p50/p95/p99 latency reservoirs.
+
+Quickstart (DESIGN.md §10; ``python -m repro.serve --smoke`` is the CI
+smoke):
+
+    from repro import serve
+    srv = serve.Server(serve.smoke_config())
+    srv.warm()                                  # plans + XLA, off the request path
+    t = srv.submit(serve.Request(op="lstsq", a=a, b=b))
+    srv.drain()
+    x = t.result()                              # == solve.lstsq(a, b, plan) bitwise
+    print(serve.metrics.latency_summary())      # p50/p95/p99 per bucket
+"""
+
+from __future__ import annotations
+
+from repro.serve import bucketing, metrics
+from repro.serve.bucketing import BucketLattice, BucketSpec
+from repro.serve.engine import Server, ServeConfig, smoke_config
+from repro.serve.queue import FlushPolicy, Rejected, Request, Ticket
+
+__all__ = [
+    "bucketing",
+    "metrics",
+    "BucketLattice",
+    "BucketSpec",
+    "Server",
+    "ServeConfig",
+    "smoke_config",
+    "FlushPolicy",
+    "Rejected",
+    "Request",
+    "Ticket",
+]

@@ -1,0 +1,219 @@
+"""The bucket lattice: plan-keyed request routing with pad/crop rules.
+
+A bucket is one *compiled program identity*: every request routed to the
+same :class:`BucketSpec` shares one solve plan, one jitted batched
+callable, and one static operand shape — so a flush is ONE launch and a
+request in steady state never retraces anything. The lattice is the map
+from a heterogeneous request ``(op, m, n, r, dtype)`` to that identity.
+
+Which axes band and which stay exact is not a free design choice — it is
+dictated by the **bitwise-parity contract**: a bucketed result must equal
+the per-request ``solve.lstsq`` answer bit for bit, or micro-batching
+changes numerics under load (the one failure mode a serving layer must
+never have). The rules, each established empirically against the packed
+pipeline (see ``tests/test_serve.py``):
+
+* ``n`` (features) is an **exact key, never padded**. ``n`` determines the
+  packed block grid and the blocked Cholesky walk; padding it across a
+  block boundary reorders the factorization's reductions (~1e-7 drift).
+  A request whose ``n`` is not in the lattice is rejected, not resized.
+* ``m`` (rows) **bands up with zero-row padding** — appended zero rows
+  extend the gram's reduction without re-associating it, so the gram (and
+  everything downstream) is bitwise unchanged. This holds for buckets
+  whose gram is a single leaf (``n ≤ plan.n_base`` — the serving regime);
+  a *recursing* gram splits ``m`` into slabs, padding moves the split, so
+  recursing buckets carry ``exact_m=True`` and admit only ``m == spec.m``.
+* ``r`` (right-hand sides) **bands up with zero-column padding** — each
+  RHS column flows through the substitutions independently, so appended
+  zero columns solve to zero columns and the crop is exact.
+* ``dtype`` is an exact key (it is part of the plan key for the same
+  reason it is part of the tune cache key).
+
+The parity reference for a request ``(m, n, r)`` served by bucket ``spec``
+is ``solve.lstsq(a, b, plan=request_twin(spec_plan, m, r))`` — the bucket's
+solve plan re-shaped to the request (same ``n_base``/``packed_block``/
+method, request ``m``/``k``). The engine's other half of the contract
+(rank-2 per-slice diagonal substitution solves, always-added traced ridge,
+replicate-a-real-request batch fill) lives in :mod:`repro.serve.engine`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+__all__ = [
+    "OPS",
+    "BucketSpec",
+    "BucketLattice",
+    "make_buckets",
+    "pad_operands",
+    "crop_result",
+]
+
+# request operations the server understands:
+#   lstsq  — min ‖A·x − b‖² + ridge‖x‖²: a (m, n), b (m, r) → x (n, r)
+#   whiten — L⁻¹·v with AᵀA = L·Lᵀ:      a (m, n), v (n, r) → z (n, r)
+OPS = ("lstsq", "whiten")
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """One bucket: a compiled-program identity in the lattice.
+
+    ``m``/``r`` are *capacities* (requests pad up to them); ``n`` is exact.
+    ``batch`` is the static flush width B of the compiled callable.
+    ``exact_m`` marks buckets whose gram recurses (``n > n_base``), where
+    zero-row m-padding would move the recursion's row split and break the
+    bitwise contract — those admit only ``m == spec.m``.
+    """
+
+    op: str
+    m: int
+    n: int
+    r: int
+    batch: int
+    dtype: str = "float32"
+    exact_m: bool = False
+
+    def __post_init__(self):
+        if self.op not in OPS:
+            raise ValueError(f"unknown serve op {self.op!r}; use one of {OPS}")
+        if self.m < self.n:
+            raise ValueError(
+                f"bucket m={self.m} < n={self.n}: the normal equations "
+                "need a tall (or square) design matrix")
+        if min(self.m, self.n, self.r, self.batch) < 1:
+            raise ValueError(f"bucket dims must be positive, got {self}")
+
+    @property
+    def key(self) -> Tuple:
+        """The routing identity (one compiled program per key)."""
+        return (self.op, self.m, self.n, self.r, self.dtype)
+
+    def label(self) -> str:
+        """Stable metric/artifact label: ``lstsq:m96:n64:r8:float32:b4``."""
+        tag = f"{self.op}:m{self.m}:n{self.n}:r{self.r}:{self.dtype}:b{self.batch}"
+        return tag + (":exact_m" if self.exact_m else "")
+
+    def admits(self, op: str, m: int, n: int, r: int, dtype: str) -> bool:
+        """Can a ``(op, m, n, r, dtype)`` request be served by this bucket?"""
+        if op != self.op or n != self.n or dtype != self.dtype:
+            return False
+        if self.exact_m:
+            if m != self.m:
+                return False
+        elif m > self.m:
+            return False
+        return r <= self.r
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "BucketSpec":
+        return cls(**d)
+
+
+def make_buckets(
+    *,
+    ops: Sequence[str] = ("lstsq",),
+    n_values: Sequence[int] = (64,),
+    m_bands: Sequence[int] = (128,),
+    r_bands: Sequence[int] = (8,),
+    batch: int = 4,
+    dtype: str = "float32",
+    n_base: Optional[int] = None,
+) -> Tuple[BucketSpec, ...]:
+    """The cross-product lattice: one bucket per (op × n × m-band × r-band).
+
+    ``n_base`` (default: the planner's ``DEFAULT_N_BASE``) decides which
+    buckets recurse and therefore carry ``exact_m`` (see module docstring).
+    """
+    if n_base is None:
+        from repro.tune.defaults import DEFAULT_N_BASE
+
+        n_base = DEFAULT_N_BASE
+    specs = []
+    for op in ops:
+        for n in n_values:
+            for m in sorted(m_bands):
+                if m < n:
+                    continue
+                for r in sorted(r_bands):
+                    specs.append(BucketSpec(
+                        op=op, m=m, n=n, r=r, batch=batch, dtype=dtype,
+                        exact_m=n > n_base))
+    if not specs:
+        raise ValueError("empty bucket lattice (every m band below n?)")
+    return tuple(specs)
+
+
+class BucketLattice:
+    """Routes requests to the smallest admitting bucket.
+
+    "Smallest" means least padding: among admitting buckets the one with
+    minimal ``(m, r)`` lexicographically — bands are nested by
+    construction, so this is the tightest capacity fit.
+    """
+
+    def __init__(self, specs: Sequence[BucketSpec]):
+        seen = set()
+        for s in specs:
+            if s.key in seen:
+                raise ValueError(f"duplicate bucket key {s.key}")
+            seen.add(s.key)
+        self.specs: Tuple[BucketSpec, ...] = tuple(
+            sorted(specs, key=lambda s: (s.op, s.n, s.dtype, s.m, s.r)))
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    def bucket_for(self, op: str, m: int, n: int, r: int,
+                   dtype: str = "float32") -> Optional[BucketSpec]:
+        """The tightest admitting bucket, or None (→ admission reject)."""
+        for s in self.specs:          # sorted ascending (m, r) per group
+            if s.admits(op, m, n, r, dtype):
+                return s
+        return None
+
+
+def pad_operands(spec: BucketSpec, a, b):
+    """Pad one request's operands to the bucket's static shape.
+
+    ``a``: (m, n) → (spec.m, n) with zero rows (bitwise-transparent to the
+    gram — the parity contract's m rule). ``b``: lstsq (m, r) →
+    (spec.m, spec.r) with zero rows (they meet A's zero rows in Aᵀb) and
+    zero columns; whiten (n, r) → (n, spec.r) with zero columns only (v
+    lives in feature space — it has no row padding to do).
+
+    Assembly is **numpy on purpose**: jnp padding/stacking would compile
+    one XLA micro-op per distinct request shape on the hot path — the
+    only compiled program a flush may touch is the bucket callable.
+    """
+    import numpy as np
+
+    a = np.asarray(a)
+    b = np.asarray(b)
+    m, n = a.shape
+    r = b.shape[-1]
+    if n != spec.n or m > spec.m or r > spec.r:
+        raise ValueError(
+            f"request ({m}, {n}, r={r}) does not fit bucket {spec.label()}")
+    a_pad = np.zeros((spec.m, spec.n), a.dtype)
+    a_pad[:m] = a
+    want_rows = spec.m if spec.op == "lstsq" else spec.n
+    b_pad = np.zeros((want_rows, spec.r), b.dtype)
+    b_pad[:b.shape[0], :r] = b
+    return a_pad, b_pad
+
+
+def crop_result(spec: BucketSpec, x, r: int):
+    """Crop one bucketed result slice back to the request's RHS count.
+
+    ``x``: (n, spec.r) → (n, r). The crop is exact by the parity
+    contract: padded RHS columns are zero end-to-end, and ``n`` was never
+    padded in the first place.
+    """
+    del spec
+    return x[:, :r]

@@ -26,6 +26,7 @@ from repro.tune import defaults  # dependency-free; safe to load eagerly
 
 __all__ = [
     "plan",
+    "warm",
     "Plan",
     "autotune",
     "analytic_plan",
@@ -40,6 +41,7 @@ __all__ = [
 
 _LAZY = {
     "plan": ("repro.tune.cache", "plan"),
+    "warm": ("repro.tune.cache", "warm"),
     "Plan": ("repro.tune.cost", "Plan"),
     "autotune": ("repro.tune.search", "autotune"),
     "analytic_plan": ("repro.tune.cost", "analytic_plan"),

@@ -44,6 +44,8 @@ __all__ = [
     "save_cache",
     "clear_memo",
     "cache_stats",
+    "warm",
+    "cache_prefetch",
 ]
 
 _LOG = logging.getLogger("repro.tune.cache")
@@ -61,6 +63,9 @@ _STAT_NAMES = (
     "sanitized",       # unknown-leaf_dispatch entries sanitized on load
     "skipped_entries", # corrupt/undeserializable entries skipped on load
     "load_failure",    # unreadable/corrupt cache file tolerated
+    "warm_hit",        # warm(): resolved from the persistent JSON cache
+    "warm_miss",       # warm(): fell through to the analytic model
+    "warm_memo",       # warm(): key already memoized (left untouched)
 )
 
 
@@ -224,6 +229,81 @@ def clear_memo() -> None:
     """Drop the in-process memo (tests; cache-file experiments)."""
     with _LOCK:
         _MEMO.clear()
+
+
+def warm(specs, *, cache_file: Optional[str] = None) -> list:
+    """Bulk-resolve plan keys into the in-process memo in ONE file read.
+
+    The pre-warm API of the serve layer: a server warming dozens of
+    buckets would otherwise pay one ``load_cache`` (a full JSON parse) per
+    ``plan()`` miss. ``warm`` reads the cache file once, resolves every
+    spec against it (persisted plan → ``source='cache'``, else the
+    analytic model — the same resolution ``plan()`` performs without
+    ``autotune``), and installs the results in the memo so the subsequent
+    per-dispatch ``plan()`` calls are memo hits.
+
+    Args:
+      specs: iterable of dicts of ``plan()`` keyword arguments, e.g.
+        ``{"op": "solve", "m": 96, "n": 64, "k": 8, "out": "packed"}``
+        (defaults match ``plan()``: ``k=n``, ``batch=0``,
+        ``dtype='float32'``, ``out='dense'``, backend auto).
+      cache_file: cache path override (default: :func:`cache_path`).
+
+    Returns:
+      The resolved Plans, in spec order. Counters: ``warm_hit`` /
+      ``warm_miss`` per resolution, ``warm_memo`` when a key was already
+      memoized (the memoized plan wins — warm never clobbers, so an
+      autotuned plan resolved earlier in the process keeps serving).
+    """
+    persisted = load_cache(cache_file)      # the ONE file read
+    resolved_plans = []
+    for spec in specs:
+        kw = dict(spec)
+        op = kw.pop("op", "ata")
+        if op not in ("ata", "gemm_tn", "solve"):
+            raise ValueError(
+                f"unknown op {op!r}; use 'ata', 'gemm_tn' or 'solve'")
+        m, n = kw.pop("m"), kw.pop("n")
+        k = kw.pop("k", None)
+        k = n if k is None else k
+        batch = kw.pop("batch", 0)
+        if op == "solve" and batch:
+            raise ValueError("op='solve' plans are unbatched (lstsq is 2-D); "
+                             f"got batch={batch}")
+        dtype = kw.pop("dtype", "float32")
+        out = kw.pop("out", "dense")
+        backend = kw.pop("backend", None) or jax.default_backend()
+        devices = kw.pop("devices", 1)
+        row_devices = kw.pop("row_devices", 1)
+        if kw:
+            raise TypeError(f"warm spec has unknown keys {sorted(kw)}")
+        key = plan_key(op, m, n, k, batch, dtype, out, backend, devices,
+                       row_devices)
+        hit = persisted.get(key)
+        if hit is not None:
+            import dataclasses
+
+            metrics.inc("tune.cache.warm_hit")
+            resolved = dataclasses.replace(hit, source="cache")
+        else:
+            metrics.inc("tune.cache.warm_miss")
+            resolved = cost.analytic_plan(
+                op, m, n, k, batch=batch, dtype=dtype, out=out,
+                backend=backend, devices=devices, row_devices=row_devices,
+            )
+        memo_key = (key, cache_file, False)
+        with _LOCK:
+            if memo_key in _MEMO:
+                metrics.inc("tune.cache.warm_memo")
+                resolved = _MEMO[memo_key]
+            else:
+                _MEMO[memo_key] = resolved
+        resolved_plans.append(resolved)
+    return resolved_plans
+
+
+# the serve layer's historical name for the same operation
+cache_prefetch = warm
 
 
 def plan(

@@ -1,0 +1,415 @@
+"""Tests for the serving layer (repro.serve).
+
+Coverage per the PR's acceptance criteria:
+
+* the **bitwise parity property**: every bucketed result equals the
+  per-request ``solve.lstsq`` answer bit for bit — ragged m/r tails,
+  pad-then-crop at exact bucket edges, vector RHS, mixed ridges in one
+  flush, float32 and float64 request dtypes, and the whiten path against
+  its unbatched pipeline;
+* the bucket lattice: admission rules (exact n/dtype, banded m/r,
+  ``exact_m`` for recursing grams), tightest-fit routing, numpy pad/crop;
+* the queue: max-batch and max-wait flushing with a fake clock, FIFO
+  order, and all three reject reasons with their retry-hint contract;
+* the zero-retrace contract: floors armed by warm, growth raises (strict)
+  or counts (non-strict);
+* serve metrics: reservoir percentiles and the published obs gauges;
+* the CLI smoke gate and the ``repro.check`` serve harness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import metrics as obs_metrics
+from repro.serve import metrics as serve_metrics
+from repro.serve.bucketing import (
+    BucketLattice,
+    BucketSpec,
+    crop_result,
+    make_buckets,
+    pad_operands,
+)
+from repro.serve.engine import Server, ServeConfig, smoke_config
+from repro.serve.queue import FlushPolicy, MicroBatchQueue, Rejected, Request
+
+# ---------------------------------------------------------------------------
+# bucketing
+
+
+def test_bucket_spec_validation():
+    with pytest.raises(ValueError):
+        BucketSpec(op="qr", m=8, n=8, r=1, batch=1)
+    with pytest.raises(ValueError):
+        BucketSpec(op="lstsq", m=4, n=8, r=1, batch=1)  # m < n
+    with pytest.raises(ValueError):
+        BucketSpec(op="lstsq", m=8, n=8, r=0, batch=1)
+
+
+def test_bucket_admission_rules():
+    s = BucketSpec(op="lstsq", m=48, n=32, r=4, batch=4)
+    assert s.admits("lstsq", 48, 32, 4, "float32")
+    assert s.admits("lstsq", 33, 32, 1, "float32")   # m, r band up
+    assert not s.admits("lstsq", 49, 32, 4, "float32")   # m over capacity
+    assert not s.admits("lstsq", 48, 33, 4, "float32")   # n is exact
+    assert not s.admits("lstsq", 48, 32, 5, "float32")   # r over capacity
+    assert not s.admits("whiten", 48, 32, 4, "float32")  # op is exact
+    assert not s.admits("lstsq", 48, 32, 4, "float64")   # dtype is exact
+    exact = BucketSpec(op="lstsq", m=48, n=32, r=4, batch=4, exact_m=True)
+    assert exact.admits("lstsq", 48, 32, 2, "float32")
+    assert not exact.admits("lstsq", 40, 32, 2, "float32")  # no m banding
+
+
+def test_make_buckets_marks_recursing_grams_exact_m():
+    specs = make_buckets(ops=("lstsq",), n_values=(32, 128), m_bands=(128,),
+                         r_bands=(4,), batch=2, n_base=64)
+    by_n = {s.n: s for s in specs}
+    assert not by_n[32].exact_m       # single-leaf gram: m-padding is bitwise
+    assert by_n[128].exact_m          # recursing gram: padding moves the split
+    # m bands below n are skipped, and an all-skipped lattice is an error
+    assert all(s.m >= s.n for s in
+               make_buckets(n_values=(32,), m_bands=(16, 48), batch=1))
+    with pytest.raises(ValueError):
+        make_buckets(n_values=(64,), m_bands=(32,), batch=1)
+
+
+def test_lattice_routes_to_tightest_bucket():
+    lattice = BucketLattice(make_buckets(
+        ops=("lstsq",), n_values=(32,), m_bands=(48, 96), r_bands=(4, 8),
+        batch=4, n_base=64))
+    assert lattice.bucket_for("lstsq", 40, 32, 3).key == \
+        ("lstsq", 48, 32, 4, "float32")
+    assert lattice.bucket_for("lstsq", 50, 32, 3).key == \
+        ("lstsq", 96, 32, 4, "float32")
+    assert lattice.bucket_for("lstsq", 40, 32, 5).key == \
+        ("lstsq", 48, 32, 8, "float32")
+    assert lattice.bucket_for("lstsq", 40, 64, 3) is None   # unknown n
+    assert lattice.bucket_for("lstsq", 97, 32, 3) is None   # over every band
+    with pytest.raises(ValueError):
+        BucketLattice([BucketSpec(op="lstsq", m=8, n=8, r=1, batch=1)] * 2)
+
+
+def test_pad_operands_is_numpy_zero_padding():
+    spec = BucketSpec(op="lstsq", m=48, n=32, r=4, batch=4)
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((40, 32)).astype(np.float32)
+    b = rng.standard_normal((40, 3)).astype(np.float32)
+    a_pad, b_pad = pad_operands(spec, a, b)
+    assert isinstance(a_pad, np.ndarray) and isinstance(b_pad, np.ndarray)
+    assert a_pad.shape == (48, 32) and b_pad.shape == (48, 4)
+    np.testing.assert_array_equal(a_pad[:40], a)
+    assert not a_pad[40:].any() and not b_pad[40:].any()
+    assert not b_pad[:, 3:].any()
+    np.testing.assert_array_equal(crop_result(spec, b_pad, 3), b_pad[:, :3])
+    # whiten's rhs lives in feature space: rows pad to n, not m
+    wspec = BucketSpec(op="whiten", m=48, n=32, r=4, batch=4)
+    _, v_pad = pad_operands(wspec, a, rng.standard_normal((32, 2)))
+    assert v_pad.shape == (32, 4)
+    for bad_a, bad_b in [(rng.standard_normal((40, 33)), b),    # wrong n
+                         (rng.standard_normal((49, 32)), b),    # m over
+                         (a, rng.standard_normal((40, 5)))]:    # r over
+        with pytest.raises(ValueError):
+            pad_operands(spec, bad_a, bad_b)
+
+
+def test_bucket_spec_json_roundtrip():
+    s = BucketSpec(op="whiten", m=96, n=64, r=8, batch=2, dtype="float64",
+                   exact_m=True)
+    assert BucketSpec.from_json(json.loads(json.dumps(s.to_json()))) == s
+
+
+# ---------------------------------------------------------------------------
+# queue (fake clock; no jax anywhere)
+
+
+def _queue(capacity=8, max_wait_s=0.01, batch=3):
+    lattice = BucketLattice(make_buckets(
+        ops=("lstsq",), n_values=(8,), m_bands=(8, 16), r_bands=(2,),
+        batch=batch, n_base=64))
+    return MicroBatchQueue(lattice, capacity=capacity,
+                           policy=FlushPolicy(max_wait_s=max_wait_s))
+
+
+def _req(m=8, n=8, r=2, **kw):
+    return Request(op="lstsq", a=np.zeros((m, n), np.float32),
+                   b=np.zeros((m, r), np.float32), **kw)
+
+
+def test_queue_max_batch_flush_and_fifo():
+    q = _queue(batch=3)
+    tickets = [q.offer(_req(), now=0.0) for _ in range(3)]
+    assert q.depth() == 3
+    batches = q.due(0.0)
+    assert len(batches) == 1 and q.depth() == 0
+    assert [t.id for _, lane in batches for t in lane] == \
+        [t.id for t in tickets]                      # FIFO within the lane
+
+
+def test_queue_max_wait_flushes_ragged():
+    q = _queue(max_wait_s=0.01, batch=3)
+    q.offer(_req(), now=0.0)
+    assert q.due(0.005) == []                        # young: not due yet
+    batches = q.due(0.02)                            # aged past max_wait
+    assert len(batches) == 1 and len(batches[0][1]) == 1
+    q.offer(_req(), now=1.0)
+    assert len(q.due(1.0, force=True)) == 1          # force drains young lanes
+
+
+def test_queue_reject_reasons_and_retry_hints():
+    q = _queue(capacity=2, max_wait_s=0.01)
+    with pytest.raises(Rejected) as e:
+        q.offer(_req(n=9), now=0.0)                  # no bucket for n=9
+    assert e.value.reason == "no-bucket" and e.value.retry_after_s is None
+    with pytest.raises(Rejected) as e:
+        q.offer(_req(deadline_s=0.001), now=0.0)     # budget < max_wait
+    assert e.value.reason == "deadline"
+    q.offer(_req(), now=0.0)
+    q.offer(_req(), now=0.0)
+    with pytest.raises(Rejected) as e:
+        q.offer(_req(), now=0.0)                     # bounded depth
+    assert e.value.reason == "capacity"
+    assert e.value.retry_after_s == pytest.approx(0.01)  # the flush bound
+
+
+def test_queue_lane_depths_track_buckets():
+    q = _queue(batch=3)
+    q.offer(_req(m=8), now=0.0)
+    q.offer(_req(m=16), now=0.0)
+    depths = q.lane_depths()
+    assert sum(depths.values()) == 2 and len(depths) == 2
+
+
+# ---------------------------------------------------------------------------
+# serve metrics
+
+
+def test_percentile_interpolation_and_reservoir_bound():
+    assert np.isnan(serve_metrics.percentile([], 50))
+    vals = list(map(float, range(100)))
+    assert serve_metrics.percentile(vals, 50) == pytest.approx(49.5)
+    assert serve_metrics.percentile(vals, 99) == pytest.approx(98.01)
+    serve_metrics.reset()
+    for i in range(serve_metrics.RESERVOIR_SIZE + 100):
+        serve_metrics.record_latency("boundcheck", float(i))
+    got = serve_metrics.samples("boundcheck")
+    assert len(got) == serve_metrics.RESERVOIR_SIZE
+    assert got[0] == 100.0                           # oldest samples evicted
+    serve_metrics.reset()
+
+
+def test_publish_percentiles_lands_in_obs_snapshot():
+    serve_metrics.reset()
+    for v in (0.001, 0.002, 0.003):
+        serve_metrics.record_latency("pubcheck", v)
+    published = serve_metrics.publish_percentiles()
+    assert published["serve.latency.pubcheck.p50"] == pytest.approx(0.002)
+    snap = obs_metrics.validate_snapshot(obs_metrics.snapshot())
+    assert "serve.latency.pubcheck.p95" in snap["gauges"]
+    summary = serve_metrics.percentiles("pubcheck")
+    assert summary["count"] == 3 and summary["mean"] == pytest.approx(0.002)
+    serve_metrics.reset()
+
+
+# ---------------------------------------------------------------------------
+# engine: the bitwise parity property suite
+
+
+@pytest.fixture(scope="module")
+def warm_server():
+    server = Server(smoke_config())
+    server.warm()
+    return server
+
+
+def _lstsq_ref(server, ticket):
+    """The parity reference: per-request solve.lstsq under the request twin
+    of the bucket plan (the published contract of the serving layer)."""
+    from repro.solve import lstsq as solve_lstsq
+
+    req = ticket.request
+    m = req.a.shape[0]
+    r = 1 if req.b.ndim == 1 else req.b.shape[-1]
+    twin = server.request_twin(ticket.bucket, m, r)
+    b2 = req.b[:, None] if req.b.ndim == 1 else req.b
+    ref = np.asarray(solve_lstsq(req.a, b2, ridge=req.ridge, plan=twin))
+    return ref[:, 0] if req.b.ndim == 1 else ref
+
+
+def _whiten_ref(server, ticket):
+    """Unbatched whiten pipeline: z = L⁻¹·v from the packed factor of the
+    (ridge-shifted) gram, under the request twin."""
+    import jax.numpy as jnp
+
+    from repro.core.ata import ata
+    from repro.solve.cholesky import cholesky
+    from repro.solve.triangular import solve_triangular
+
+    req = ticket.request
+    sp = server.bucket_plan(ticket.bucket)
+    twin = server.request_twin(ticket.bucket, req.a.shape[0],
+                               req.b.shape[-1])
+    ata_plan = dataclasses.replace(twin, op="ata", k=twin.n, out="packed",
+                                   method=None, predicted_s=None)
+    gram = ata(jnp.asarray(req.a, jnp.float32), plan=ata_plan, out="packed",
+               packed_block=sp.packed_block)
+    gram = gram.add_scaled_identity(jnp.float32(req.ridge))
+    f = cholesky(gram, plan=twin)
+    return np.asarray(solve_triangular(
+        f, jnp.asarray(req.b, jnp.float32), transpose=False, plan=twin))
+
+
+def test_mixed_workload_parity_is_bitwise(warm_server):
+    """The headline property: ragged m/r, vector rhs, mixed ridges, both
+    ops — every served slice bitwise-equals its per-request reference."""
+    from repro.serve.__main__ import _mixed_workload, _run_workload
+
+    served, rejected = _run_workload(warm_server, _mixed_workload(24, 11))
+    assert rejected == 0 and all(t.done() for t in served)
+    assert warm_server.retraces() == 0
+    for t in served:
+        ref = (_lstsq_ref if t.request.op == "lstsq" else _whiten_ref)(
+            warm_server, t)
+        np.testing.assert_array_equal(ref, np.asarray(t.result()),
+                                      err_msg=t.bucket.label())
+
+
+def test_parity_at_exact_bucket_edges(warm_server):
+    """Requests at exact capacity (no padding) and one row/col inside it
+    (maximal pad-then-crop) meet the same bitwise contract."""
+    rng = np.random.default_rng(5)
+    for m, r in [(48, 4), (47, 3), (96, 8), (33, 1)]:
+        a = rng.standard_normal((m, 32)).astype(np.float32)
+        b = rng.standard_normal((m, r)).astype(np.float32)
+        t = warm_server.submit(Request(op="lstsq", a=a, b=b, ridge=1e-4))
+        warm_server.drain()
+        ref = _lstsq_ref(warm_server, t)
+        np.testing.assert_array_equal(ref, np.asarray(t.result()),
+                                      err_msg=f"m={m} r={r}")
+        assert t.result().shape == (32, r)
+
+
+def test_vector_rhs_roundtrip(warm_server):
+    rng = np.random.default_rng(6)
+    a = rng.standard_normal((40, 32)).astype(np.float32)
+    b = rng.standard_normal((40,)).astype(np.float32)
+    t = warm_server.submit(Request(op="lstsq", a=a, b=b))
+    warm_server.drain()
+    assert t.result().shape == (32,)                 # 1-D in, 1-D out
+    np.testing.assert_array_equal(_lstsq_ref(warm_server, t),
+                                  np.asarray(t.result()))
+
+
+def test_float64_requests_share_the_contract():
+    """An f64 bucket serves f64 payloads; parity stays bitwise because
+    both paths share lstsq's f32 compute cast."""
+    cfg = ServeConfig(
+        buckets=(BucketSpec(op="lstsq", m=48, n=32, r=2, batch=2,
+                            dtype="float64"),),
+        capacity=8, max_wait_s=0.005)
+    server = Server(cfg)
+    server.warm()
+    rng = np.random.default_rng(7)
+    a = rng.standard_normal((40, 32))
+    b = rng.standard_normal((40, 2))
+    t = server.submit(Request(op="lstsq", a=a, b=b, ridge=1e-3))
+    server.drain()
+    np.testing.assert_array_equal(_lstsq_ref(server, t),
+                                  np.asarray(t.result()))
+    assert server.retraces() == 0
+
+
+def test_ragged_flush_replicates_a_real_request(warm_server):
+    """A lone request in a width-4 bucket flushes with 3 replicated fill
+    slots (counted, cropped, never returned) and still matches its ref."""
+    before = obs_metrics.get("serve.padded_slots")
+    rng = np.random.default_rng(8)
+    a = rng.standard_normal((40, 32)).astype(np.float32)
+    b = rng.standard_normal((40, 2)).astype(np.float32)
+    t = warm_server.submit(Request(op="lstsq", a=a, b=b))
+    warm_server.drain()
+    assert obs_metrics.get("serve.padded_slots") - before == 3
+    np.testing.assert_array_equal(_lstsq_ref(warm_server, t),
+                                  np.asarray(t.result()))
+
+
+def test_warm_arms_the_retrace_floor(warm_server):
+    assert warm_server.warmed
+    for spec in warm_server.config.buckets:
+        assert warm_server._trace_floor[spec] == 1   # one trace per bucket
+    stats = warm_server.stats()
+    assert set(stats["warm_seconds"]) == {s.label() for s in
+                                          warm_server.config.buckets}
+
+
+def test_retrace_assertion_raises_strict_counts_lenient(warm_server):
+    start = obs_metrics.get("serve.retraces")
+    spec = warm_server.config.buckets[0]
+    fn, _ = warm_server.bucket_callable(spec)
+    real_floor = warm_server._trace_floor[spec]
+    warm_server._trace_floor[spec] = 0               # simulate a hot retrace
+    with pytest.raises(RuntimeError, match="zero-retrace"):
+        warm_server._assert_no_retrace(spec, fn)     # counts AND raises
+    assert warm_server._trace_floor[spec] == real_floor  # floor self-heals
+    lenient = Server(dataclasses.replace(warm_server.config,
+                                         strict_retrace=False))
+    lenient._plans = warm_server._plans
+    lenient._fns = warm_server._fns
+    lenient._trace_floor[spec] = 0
+    before = obs_metrics.get("serve.retraces")
+    lenient._assert_no_retrace(spec, fn)             # counts, no raise
+    assert obs_metrics.get("serve.retraces") == before + real_floor
+    # the counter is process-global: undo both simulated retraces so later
+    # tests (and fresh servers) still see a clean steady state
+    obs_metrics.inc("serve.retraces", start - obs_metrics.get("serve.retraces"))
+
+
+def test_server_propagates_admission_rejects(warm_server):
+    with pytest.raises(Rejected):
+        warm_server.submit(_req(m=8, n=8, r=2))      # n=8 not in the lattice
+
+
+def test_deadline_missed_is_flagged(warm_server):
+    rng = np.random.default_rng(9)
+    a = rng.standard_normal((40, 32)).astype(np.float32)
+    b = rng.standard_normal((40, 2)).astype(np.float32)
+    dl = warm_server.config.max_wait_s               # admissible, but tight
+    t = warm_server.submit(Request(op="lstsq", a=a, b=b, deadline_s=dl))
+    time.sleep(2 * dl)                               # age past the budget
+    warm_server.drain()
+    assert t.done() and t.deadline_missed
+    assert t.latency_s > dl
+
+
+# ---------------------------------------------------------------------------
+# CLI + check harness
+
+_TINY = ServeConfig(
+    buckets=(BucketSpec(op="lstsq", m=48, n=32, r=4, batch=2),),
+    capacity=8, max_wait_s=0.005)
+
+
+def test_check_harness_run_serve_is_clean():
+    from repro.check import harness
+
+    report = harness.run_serve(config=_TINY, steady_batches=1)
+    assert report.exit_code == 0
+    labels = [a["label"] for a in report.artifacts]
+    assert any(l.startswith("serve:lstsq") for l in labels)
+    assert "serve:steady-state" in labels
+
+
+def test_cli_smoke_gate(tmp_path):
+    from repro.serve.__main__ import main
+
+    out = tmp_path / "serve_report.json"
+    assert main(["--smoke", "--requests", "16", "--out", str(out)]) == 0
+    report = json.loads(out.read_text())
+    assert report["schema"] == "repro.serve/v1"
+    assert report["served"] == 16 and not report["failures"]
+    assert report["parity_checked"] > 0
+    assert report["stats"]["counters"].get("serve.retraces", 0) == 0

@@ -136,3 +136,34 @@ def test_remat_policies_same_loss():
         outs[remat] = np.asarray(logits)
     np.testing.assert_allclose(outs["none"], outs["dots"], rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(outs["none"], outs["full"], rtol=1e-5, atol=1e-5)
+
+
+def test_pad_slots_keeps_shapes_static_without_rng_waste():
+    """The queue tail pads with zeros instead of prefilling fresh prompts:
+    shapes stay static (no tail retrace) and the prompt RNG advances only
+    for requested slots — a 10-request run with batch 4 must generate
+    exactly 10 prompts' worth of randomness, not 12."""
+    from repro.launch.serve import _pad_slots
+
+    rng = np.random.default_rng(0)
+    real = rng.integers(0, 64, size=(2, 8)).astype(np.int32)
+    padded = _pad_slots(real, 4)
+    assert padded.shape == (4, 8) and padded.dtype == real.dtype
+    np.testing.assert_array_equal(padded[:2], real)
+    assert not padded[2:].any()                    # zero slots, not prompts
+    full = rng.integers(0, 64, size=(4, 8)).astype(np.int32)
+    assert _pad_slots(full, 4) is full             # full batches untouched
+
+    # the reproducibility property the fix buys: the tail no longer
+    # consumes RNG for slots nobody requested
+    def draws(n_requests, b):
+        g = np.random.default_rng(7)
+        seen = []
+        remaining = n_requests
+        while remaining:
+            n = min(b, remaining)
+            seen.append(_pad_slots(g.integers(0, 64, size=(n, 8)), b))
+            remaining -= n
+        return g.integers(0, 64, size=(1, 8))      # next draw after serving
+
+    np.testing.assert_array_equal(draws(10, 4), draws(10, 2))

@@ -539,3 +539,71 @@ def test_distributed_tiling_is_choose_tiling():
 
     for n, p in [(256, 4), (1000, 8), (4096, 16)]:
         assert choose_tiling(n, p) == cost.distributed_tiling(n, p)
+
+
+# --- warm / cache_prefetch (the serve layer's bulk pre-warm API) ------------
+
+
+def test_warm_resolves_analytic_and_seeds_the_memo():
+    from repro.tune.cache import cache_stats, warm
+
+    before = cache_stats()
+    specs = [dict(op="solve", m=48, n=32, k=4, out="packed"),
+             dict(op="ata", m=256, n=128)]
+    plans = warm(specs)
+    after = cache_stats()
+    assert after["warm_miss"] - before["warm_miss"] == 2  # empty cache file
+    assert after["warm_hit"] == before["warm_hit"]
+    assert [p.op for p in plans] == ["solve", "ata"]      # spec order kept
+    # the point of warming: the per-dispatch plan() calls are memo hits
+    served = tune.plan(op="solve", m=48, n=32, k=4, out="packed")
+    assert served is plans[0]
+    assert cache_stats()["memo_hit"] - after["memo_hit"] == 1
+
+
+def test_warm_serves_persisted_plans_in_one_read(tmp_path):
+    from repro.tune.cache import cache_stats, warm
+
+    path = str(tmp_path / "c.json")
+    analytic = tune.plan(op="solve", m=96, n=64, k=8, out="packed",
+                         cache_file=path)
+    key = plan_key("solve", 96, 64, 8, 0, "float32", "packed",
+                   analytic.backend, 1, 1)
+    save_cache({key: dataclasses.replace(analytic, source="measured")}, path)
+    tune.cache.clear_memo()
+    before = cache_stats()
+    hit, miss = warm([dict(op="solve", m=96, n=64, k=8, out="packed"),
+                      dict(op="solve", m=48, n=32, k=4, out="packed")],
+                     cache_file=path)
+    after = cache_stats()
+    assert after["warm_hit"] - before["warm_hit"] == 1
+    assert after["warm_miss"] - before["warm_miss"] == 1
+    assert hit.source == "cache" and miss.source == "analytic"
+
+
+def test_warm_never_clobbers_an_existing_memo_entry():
+    from repro.tune.cache import cache_stats, warm
+
+    first = tune.plan(op="solve", m=48, n=32, k=4, out="packed")
+    before = cache_stats()
+    (warmed,) = warm([dict(op="solve", m=48, n=32, k=4, out="packed")])
+    assert warmed is first                 # the memoized plan wins
+    assert cache_stats()["warm_memo"] - before["warm_memo"] == 1
+
+
+def test_warm_validates_specs():
+    from repro.tune.cache import warm
+
+    with pytest.raises(ValueError, match="unknown op"):
+        warm([dict(op="qr", m=8, n=8)])
+    with pytest.raises(ValueError, match="unbatched"):
+        warm([dict(op="solve", m=8, n=8, batch=4)])
+    with pytest.raises(TypeError, match="unknown keys"):
+        warm([dict(op="ata", m=8, n=8, block_size=32)])
+
+
+def test_cache_prefetch_is_warm_and_lazily_exported():
+    from repro.tune import cache
+
+    assert cache.cache_prefetch is cache.warm
+    assert tune.warm is cache.warm         # repro.tune lazy re-export
